@@ -1,0 +1,87 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--mesh 16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_time(t: float) -> str:
+    if t >= 1:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t*1e3:.1f}ms"
+    return f"{t*1e6:.0f}us"
+
+
+def load(mesh: str) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(str(Path(__file__).resolve().parents[1]
+                                  / "experiments/dryrun/*.json"))):
+        r = json.load(open(f))
+        if r["mesh"] == mesh:
+            recs.append(r)
+    recs.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])))
+    return recs
+
+
+def table(mesh: str) -> str:
+    rows = ["| arch | shape | compute | memory | collective | bottleneck | "
+            "MODEL/HLO | roofline frac | HBM temp/chip | note |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - "
+                        f"| - | - | {r['status']} |")
+            continue
+        rf = r["roofline"]
+        temp = r["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_time(rf['t_compute'])} | "
+            f"{fmt_time(rf['t_memory'])} | {fmt_time(rf['t_collective'])} | "
+            f"{rf['bottleneck']} | {rf['flops_ratio']:.2f} | "
+            f"{rf['roofline_fraction']:.3f} | {temp:.1f}GiB | "
+            f"{rf.get('note','')} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = ["| arch | shape | status | compile s | HLO GFLOPs/chip | "
+            "HLO GiB/chip | coll GiB/chip | placement |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh):
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['status']} | - | "
+                        f"- | - | - | - |")
+            continue
+        w = r["hlo_walk"]
+        kinds = r.get("placement", {}).get("kinds", {})
+        off = ",".join(k for k, v in kinds.items() if v != "device") or "none"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} | "
+            f"{w['flops']/1e9:.1f} | {w['bytes']/2**30:.1f} | "
+            f"{w['collective_bytes']/2**30:.2f} | offload:{off} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    meshes = [args.mesh] if args.mesh else ["16x16", "2x16x16"]
+    for m in meshes:
+        print(f"\n### Dry-run — mesh {m}\n")
+        print(dryrun_table(m))
+        print(f"\n### Roofline — mesh {m}\n")
+        print(table(m))
+
+
+if __name__ == "__main__":
+    main()

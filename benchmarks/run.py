@@ -1,0 +1,44 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §6 for the
+paper-figure -> benchmark index). Run: PYTHONPATH=src python -m benchmarks.run
+[--only substring] [--skip-apps]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run benchmarks whose name contains this")
+    ap.add_argument("--skip-apps", action="store_true")
+    args = ap.parse_args()
+
+    from repro.heimdall.micro import ALL_MICRO
+    from repro.heimdall.apps import ALL_APPS
+
+    benches = list(ALL_MICRO) + ([] if args.skip_apps else list(ALL_APPS))
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            for row in bench():
+                print(row.csv(), flush=True)
+        except Exception as e:      # noqa: BLE001
+            failures += 1
+            print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

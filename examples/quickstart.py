@@ -1,0 +1,57 @@
+"""Quickstart: build an assigned arch, plan tier placement, train a few
+steps, then serve a few tokens — the whole public API in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.config.base import (ParallelConfig, RunConfig, ShapeConfig,
+                               get_config)
+from repro.core.costmodel import optimal_offload
+from repro.core.placement import plan_training_placement
+from repro.launch.serve import Request, ServeEngine
+from repro.launch.train import train
+
+
+def main():
+    # 1. pick an assigned architecture (any of the 10; reduced for CPU)
+    cfg = get_config("yi-9b")
+    print(f"arch={cfg.name}: {cfg.num_params/1e9:.1f}B params")
+
+    # 2. the paper's technique: plan tier placement for a 256-chip pod
+    plan = plan_training_placement(cfg, 256)
+    print(f"placement: {plan.kinds} "
+          f"(HBM {plan.hbm_used/2**30:.1f}/{plan.hbm_capacity/2**30:.0f} GiB)")
+
+    # ... and the offload split the cost model recommends for serving
+    best = optimal_offload(model_bytes=2 * cfg.num_params,
+                           hbm_capacity=12 << 30, link_bw=8 << 30,
+                           kv_bytes_per_seq=100 << 20,
+                           flops_per_token=2 * cfg.num_params,
+                           peak_flops=197e12, hbm_bw=819e9)
+    print(f"cost-model optimal offload: {best.offload_bytes/2**30:.1f} GiB "
+          f"-> {best.tokens_per_s:.0f} tok/s ({best.bound}-bound)")
+
+    # 3. train a reduced config for a few steps
+    small = cfg.reduced()
+    out = train(small, ShapeConfig("quick", 64, 4, "train"),
+                RunConfig(steps=10, learning_rate=1e-3, warmup_steps=2,
+                          checkpoint_dir="/tmp/quickstart_ckpt",
+                          log_every=5),
+                ParallelConfig())
+    print(f"train: loss {out['history'][0]:.3f} -> {out['history'][-1]:.3f}")
+
+    # 4. serve a batch of requests
+    engine = ServeEngine(small)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, small.vocab_size, 16)
+                    .astype(np.int32), 8) for i in range(2)]
+    results = engine.serve(reqs)
+    print(f"serve: {results[0].decode_ms_per_tok:.1f} ms/tok, "
+          f"sample tokens {results[0].tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Assigned-architecture registry. Importing this package registers all archs."""
+
+from repro.configs import (  # noqa: F401
+    qwen2_72b,
+    gemma3_27b,
+    yi_9b,
+    qwen15_110b,
+    deepseek_v3_671b,
+    mixtral_8x22b,
+    whisper_small,
+    zamba2_7b,
+    qwen2_vl_72b,
+    xlstm_350m,
+)
+
+from repro.config.base import get_config, list_archs  # noqa: F401

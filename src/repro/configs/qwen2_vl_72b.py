@@ -1,0 +1,27 @@
+"""Qwen2-VL-72B [arXiv:2409.12191; hf]: qwen2-72b backbone + M-RoPE.
+
+Vision frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings; M-RoPE uses 3 position axes (t, h, w).
+"""
+
+from repro.config.base import ModelConfig, register
+
+
+@register("qwen2-vl-72b")
+def qwen2_vl_72b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=29568,
+        vocab_size=152064,
+        attn_type="full",
+        qkv_bias=True,
+        mrope=True,
+        frontend="vision",
+        rope_theta=1e6,
+    )

@@ -1,0 +1,27 @@
+"""Whisper-small [arXiv:2212.04356]: encoder-decoder transformer backbone.
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings of shape (batch, frames, d_model).
+"""
+
+from repro.config.base import ModelConfig, register
+
+
+@register("whisper-small")
+def whisper_small() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small",
+        family="audio",
+        num_layers=12,               # decoder layers
+        num_encoder_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        head_dim=64,
+        d_ff=3072,
+        vocab_size=51865,
+        attn_type="full",
+        encoder_decoder=True,
+        frontend="audio",
+        rope_theta=1e4,
+    )

@@ -1,0 +1,122 @@
+"""int8 block compression for tier transfers + error-feedback grad compression.
+
+The paper's related work ([61] Arelakis et al.) motivates transparent
+compression on the slow coherent link; here it is a first-class beyond-paper
+optimization: anything crossing the HBM<->host link (offloaded optimizer
+reads/writes, streamed weights, cross-pod gradients) can travel as int8
+blocks with fp32 scales (≈ 4x fewer bytes over the bottleneck link at
+<0.5% relative error, see tests/test_compression.py).
+
+A Pallas TPU kernel for the quantize/dequantize hot loop lives in
+repro.kernels.quant; this module is the jnp reference implementation and the
+tree-level API.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(x: jax.Array, block: int = BLOCK):
+    """Blockwise symmetric int8 quantization over the flattened array.
+
+    Returns (q int8 [n_blocks, block], scales f32 [n_blocks], orig_shape).
+    """
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scales = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scales), -127, 127).astype(jnp.int8)
+    return q, scales[:, 0], x.shape
+
+
+def dequantize_int8(q: jax.Array, scales: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def roundtrip_int8(x: jax.Array, block: int = BLOCK) -> jax.Array:
+    q, s, shape = quantize_int8(x, block)
+    return dequantize_int8(q, s, shape)
+
+
+# --------------------------------------------------------------------------
+# Error-feedback gradient compression (1-bit-Adam-style residual carrying)
+# --------------------------------------------------------------------------
+
+
+def ef_compress(grad: jax.Array, residual: jax.Array, block: int = BLOCK):
+    """Compress (grad + residual); return (q, scales, new_residual)."""
+    target = grad.astype(jnp.float32) + residual
+    q, s, shape = quantize_int8(target, block)
+    approx = dequantize_int8(q, s, shape)
+    return (q, s), target - approx
+
+
+def ef_init(params) -> dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_tree(grads, residuals, block: int = BLOCK):
+    """Tree-wise error-feedback compression.
+
+    Returns (compressed tree of (q, scales), new residual tree). The
+    decompressed gradients are what the optimizer consumes; the residual
+    carries the quantization error into the next step so the *accumulated*
+    update is unbiased.
+    """
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    qs, rs = [], []
+    for g, r in zip(flat_g, flat_r):
+        (q, s), nr = ef_compress(g, r, block)
+        qs.append((q, s, g.shape))
+        rs.append(nr)
+    return jax.tree.unflatten(tdef, [q for q in qs]), \
+        jax.tree.unflatten(tdef, rs)
+
+
+def decompress_tree(compressed):
+    def dec(leaf):
+        q, s, shape = leaf
+        return dequantize_int8(q, s, shape)
+    return jax.tree.map(dec, compressed,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 3)
+
+
+# --------------------------------------------------------------------------
+# Compressed cross-pod gradient reduction (beyond-paper §Perf optimization)
+# --------------------------------------------------------------------------
+
+
+def compressed_pod_mean(x: jax.Array, pod_axis: str = "pod",
+                        block: int = BLOCK) -> jax.Array:
+    """Mean over the pod axis with int8 on the wire (inside shard_map).
+
+    Replaces a bf16/f32 all-reduce over the slow DCN link with an int8
+    all_gather + local mean: wire bytes drop 2-4x. Call inside a shard_map
+    region manual over `pod_axis`.
+    """
+    q, s, shape = quantize_int8(x, block)
+    qg = jax.lax.all_gather(q, pod_axis)          # (n_pods, nb, block) int8
+    sg = jax.lax.all_gather(s, pod_axis)          # (n_pods, nb)
+    vals = (qg.astype(jnp.float32) * sg[..., None])   # (n_pods, nb, block)
+    mean = vals.mean(0).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return mean[:n].reshape(shape)

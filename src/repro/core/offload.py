@@ -1,0 +1,104 @@
+"""Offload engine: placing training/serving state across memory tiers.
+
+Uses the JAX memories API (NamedSharding(memory_kind=...)) — the TPU
+equivalent of the paper's coherent-link byte-addressability: host memory is
+directly addressable by the program, XLA schedules the link transfers.
+
+Two modes mirroring the paper:
+  * sync (paper-faithful §6.1.5): offloaded tensors are consumed in place —
+    every use pays the link transfer on the critical path (the paper
+    measured >99% of step time in these copies for vLLM CPU-offload).
+  * stream (beyond-paper): double-buffered layer streaming for serving
+    (Python-level async prefetch, see StreamingParamServer) and
+    XLA-scheduler-overlapped optimizer offload for training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import queue
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.core.placement import PlacementPlan
+
+
+def with_memory_kind(sharding: NamedSharding, kind: str) -> NamedSharding:
+    return NamedSharding(sharding.mesh, sharding.spec, memory_kind=kind)
+
+
+def put_tree(tree, kind: str):
+    """device_put a pytree into a memory kind (keeping shardings)."""
+    def put(x):
+        s = x.sharding if hasattr(x, "sharding") else None
+        if isinstance(s, NamedSharding):
+            return jax.device_put(x, with_memory_kind(s, kind))
+        return jax.device_put(
+            x, jax.sharding.SingleDeviceSharding(
+                jax.devices()[0], memory_kind=kind))
+    return jax.tree.map(put, tree)
+
+
+def state_shardings(model, plan: PlacementPlan):
+    """Shardings (with memory kinds) for (params_bf16, master, mu, nu)."""
+    kinds = plan.memory_kinds()
+    def shard_tree(kind):
+        mk = None if kind == "device" else kind
+        return jax.tree.map(
+            lambda s: model.param_sharding(s, mk), model.specs,
+            is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "shape"))
+    return {g: shard_tree(kinds[g]) for g in kinds}
+
+
+def fetch_to_device(tree):
+    """Synchronous tier fetch (paper-faithful copy-on-demand)."""
+    return put_tree(tree, "device")
+
+
+class StreamingParamServer:
+    """Double-buffered layer streaming for weight-offloaded serving.
+
+    Host-resident stacked layer params are fetched one layer ahead of the
+    compute (the beyond-paper overlap mode; `overlap≈1` in the cost model).
+    jax.device_put is async, so `prefetch(i+1)` overlaps with layer i's
+    compute exactly like the paper's suggestion of using a copy engine
+    (Intel DSA §5.2) off the critical path.
+    """
+
+    def __init__(self, host_params: Any, n_layers: int,
+                 slice_fn: Callable[[Any, int], Any]):
+        self.host_params = host_params
+        self.n_layers = n_layers
+        self.slice_fn = slice_fn
+        self._buf: dict[int, Any] = {}
+
+    def prefetch(self, i: int):
+        if 0 <= i < self.n_layers and i not in self._buf:
+            layer = self.slice_fn(self.host_params, i)
+            self._buf[i] = put_tree(layer, "device")   # async dispatch
+
+    def get(self, i: int):
+        self.prefetch(i)
+        self.prefetch(i + 1)                            # overlap next layer
+        layer = self._buf.pop(i)
+        jax.block_until_ready(jax.tree.leaves(layer)[0])
+        return layer
+
+
+@dataclasses.dataclass
+class OffloadStats:
+    bytes_to_host: int = 0
+    bytes_to_device: int = 0
+    transfers: int = 0
+
+    def record(self, tree, direction: str):
+        nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+        if direction == "to_host":
+            self.bytes_to_host += nbytes
+        else:
+            self.bytes_to_device += nbytes
+        self.transfers += 1

@@ -1,0 +1,96 @@
+"""Memory-tier and link topology model.
+
+This is the paper's Table 1 / Figure 1 translated to the TPU world: every
+memory pool an accelerator can reach, with capacity / bandwidth / latency,
+plus the coherent links between them. HEIMDALL (repro.heimdall) calibrates
+these numbers on real hardware; here they default to published v5e specs.
+
+Paper-tier ↔ TPU-tier correspondence (DESIGN.md §2):
+    DIMM (local)      -> HBM           (fast, small, 'device')
+    CXL expander      -> pinned host   (slower link, big, 'pinned_host')
+    CXL pool / SHM    -> pooled host   (DCN-reachable, biggest, highest lat)
+    remote-NUMA DIMM  -> peer-chip HBM over ICI
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.roofline import hw
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryTier:
+    name: str
+    capacity: int              # bytes available per chip(-share)
+    read_bw: float             # bytes/s per chip
+    write_bw: float            # bytes/s per chip
+    latency: float             # seconds (single cacheline-equivalent access)
+    memory_kind: Optional[str]  # jax memory kind, None if not addressable
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    src: str
+    dst: str
+    bandwidth: float           # bytes/s per chip
+    latency: float
+
+
+@dataclasses.dataclass(frozen=True)
+class TierTopology:
+    tiers: dict
+    links: dict
+
+    def tier(self, name: str) -> MemoryTier:
+        return self.tiers[name]
+
+    def link_bw(self, src: str, dst: str) -> float:
+        if (src, dst) in self.links:
+            return self.links[(src, dst)].bandwidth
+        if (dst, src) in self.links:
+            return self.links[(dst, src)].bandwidth
+        raise KeyError((src, dst))
+
+    @classmethod
+    def tpu_v5e(cls, chips_per_host: int = hw.CHIPS_PER_HOST
+                ) -> "TierTopology":
+        pcie_per_chip = hw.PCIE_BANDWIDTH / chips_per_host
+        host_share = hw.HOST_DRAM_CAPACITY // chips_per_host
+        tiers = {
+            "hbm": MemoryTier("hbm", hw.HBM_CAPACITY, hw.HBM_BANDWIDTH,
+                              hw.HBM_BANDWIDTH, 0.4e-6, "device"),
+            "host": MemoryTier("host", host_share, pcie_per_chip,
+                               pcie_per_chip, 2e-6, "pinned_host"),
+            "pool": MemoryTier("pool", 4 * host_share,
+                               hw.DCN_BANDWIDTH_PER_HOST / chips_per_host,
+                               hw.DCN_BANDWIDTH_PER_HOST / chips_per_host,
+                               10e-6, None),
+            "peer_hbm": MemoryTier("peer_hbm", hw.HBM_CAPACITY,
+                                   hw.ICI_LINK_BANDWIDTH,
+                                   hw.ICI_LINK_BANDWIDTH, 1e-6, None),
+        }
+        links = {
+            ("hbm", "host"): Link("hbm", "host", pcie_per_chip, 2e-6),
+            ("hbm", "peer_hbm"): Link("hbm", "peer_hbm",
+                                      hw.ICI_LINK_BANDWIDTH, 1e-6),
+            ("hbm", "pool"): Link("hbm", "pool",
+                                  hw.DCN_BANDWIDTH_PER_HOST / chips_per_host,
+                                  10e-6),
+            ("host", "pool"): Link("host", "pool",
+                                   hw.DCN_BANDWIDTH_PER_HOST / chips_per_host,
+                                   10e-6),
+        }
+        return cls(tiers=tiers, links=links)
+
+    @classmethod
+    def from_calibration(cls, measurements: dict) -> "TierTopology":
+        """Build a topology from HEIMDALL measurement output
+        ({tier: {capacity, read_bw, write_bw, latency, memory_kind}})."""
+        tiers = {k: MemoryTier(k, **v) for k, v in measurements.items()}
+        return cls(tiers=tiers, links={})
+
+
+# Addressable tiers under the JAX memories API (what placement can use).
+ADDRESSABLE = ("hbm", "host")

@@ -1,0 +1,62 @@
+"""HEIMDALL harness: low-noise timing + tier placement helpers + CSV rows.
+
+The paper runs its microbenchmarks in kernel space with prefetchers off; the
+JAX analogue is jit-compiled closures timed over many repetitions with
+explicit dispatch barriers (block_until_ready), warmup iterations discarded,
+and median-of-runs reporting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str                 # free-form derived metric, e.g. "GiB/s=12.3"
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def time_fn(fn: Callable, *args, warmup: int = 3, iters: int = 10,
+            inner: int = 1) -> float:
+    """Median wall-time per call in seconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) / inner)
+    return statistics.median(times)
+
+
+def tier_sharding(memory_kind: str = "device",
+                  mesh=None) -> NamedSharding:
+    if mesh is None:
+        mesh = jax.make_mesh((1,), ("x",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    return NamedSharding(mesh, P(), memory_kind=memory_kind)
+
+
+def place(x: jax.Array, tier: str) -> jax.Array:
+    """tier: 'hbm' -> device memory, 'host' -> pinned_host."""
+    kind = {"hbm": "device", "device": "device",
+            "host": "pinned_host", "pinned_host": "pinned_host"}[tier]
+    return jax.device_put(x, tier_sharding(kind))
+
+
+TIERS = ("hbm", "host")

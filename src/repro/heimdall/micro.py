@@ -1,0 +1,295 @@
+"""HEIMDALL microbenchmarks — one function per paper figure.
+
+Each returns list[Row]. On this CPU container both "tiers" live in host RAM
+(the *relative* numbers compress); on a real TPU host the same code probes
+HBM vs pinned-host across PCIe. The analytic tier curves used by placement
+come from repro.core.costmodel; these benchmarks are the calibration path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.heimdall.harness import Row, TIERS, place, time_fn
+
+
+# -- Fig 4: load latency (pointer chase) ------------------------------------
+
+def micro_latency(n_elems: int = 1 << 16, chase_len: int = 2048) -> list:
+    from repro.heimdall.harness import tier_sharding
+    rows = []
+    perm = np.random.default_rng(0).permutation(n_elems).astype(np.int32)
+    dev = tier_sharding("device")
+
+    @jax.jit
+    def chase(p):
+        def body(i, idx):
+            # each access returns to device memory: a dependent
+            # load-from-tier chain, like the paper's pointer chase
+            return jax.device_put(p[idx], dev)
+        return jax.lax.fori_loop(0, chase_len, body, jnp.int32(0))
+
+    for tier in TIERS:
+        p = place(jnp.asarray(perm), tier)
+        t = time_fn(chase, p)
+        ns = t / chase_len * 1e9
+        rows.append(Row(f"micro_latency/{tier}", t * 1e6,
+                        f"ns_per_access={ns:.1f}"))
+    return rows
+
+
+# -- Fig 5: bandwidth scaling with concurrency -------------------------------
+
+def micro_bandwidth_scaling(mb: int = 32) -> list:
+    rows = []
+    n = mb * (1 << 20) // 4
+
+    for tier in TIERS:
+        for streams in (1, 2, 4, 8):
+            xs = [place(jnp.arange(n // streams, dtype=jnp.float32), tier)
+                  for _ in range(streams)]
+
+            @jax.jit
+            def read_all(*arrs):
+                return [a.sum() for a in arrs]
+
+            t = time_fn(read_all, *xs)
+            bw = mb / (1 << 10) / t
+            rows.append(Row(f"micro_bandwidth/{tier}/streams={streams}",
+                            t * 1e6, f"GiB_s={bw:.2f}"))
+    return rows
+
+
+# -- Fig 6: loaded latency ----------------------------------------------------
+
+def micro_loaded_latency(n_elems: int = 1 << 16, mb: int = 16) -> list:
+    rows = []
+    perm = np.random.default_rng(0).permutation(n_elems).astype(np.int32)
+    big = jnp.arange(mb * (1 << 20) // 4, dtype=jnp.float32)
+
+    from repro.heimdall.harness import tier_sharding
+    dev = tier_sharding("device")
+
+    @jax.jit
+    def chase_under_load(p, x):
+        s = x.sum()                       # the bandwidth load
+        def body(i, idx):
+            return jax.device_put(p[idx], dev)
+        idx = jax.lax.fori_loop(0, 1024, body, jnp.int32(0))
+        return s, idx
+
+    for tier in TIERS:
+        p = place(jnp.asarray(perm), tier)
+        x = place(big, tier)
+        t = time_fn(chase_under_load, p, x)
+        rows.append(Row(f"micro_loaded_latency/{tier}", t * 1e6,
+                        f"ns_per_access_loaded={t/1024*1e9:.1f}"))
+    return rows
+
+
+# -- Fig 7: weighted interleave ------------------------------------------------
+
+def micro_weighted_interleave(pages: int = 64, page_kb: int = 256) -> list:
+    from repro.core.placement import interleave_pages
+    rows = []
+    n = page_kb * 256                     # f32 per page
+    base = [jnp.full((n,), float(i)) for i in range(pages)]
+    for weights in ((1, 0), (0, 1), (2, 1), (4, 1), (1, 1)):
+        assign = interleave_pages(pages, list(weights))
+        placed = [place(b, TIERS[a]) for b, a in zip(base, assign)]
+
+        @jax.jit
+        def read_all(*arrs):
+            return sum(a.sum() for a in arrs)
+
+        t = time_fn(read_all, *placed)
+        gib = pages * page_kb / (1 << 20)
+        rows.append(Row(
+            f"micro_interleave/w={weights[0]}:{weights[1]}", t * 1e6,
+            f"GiB_s={gib/t:.2f}"))
+    return rows
+
+
+# -- Fig 8: flush/writeback ------------------------------------------------------
+
+def micro_writeback(sizes_kb=(64, 1024, 16384)) -> list:
+    rows = []
+    for kb in sizes_kb:
+        x = place(jnp.arange(kb * 256, dtype=jnp.float32), "hbm")
+
+        def wb(a):
+            return place(a, "host")
+
+        t = time_fn(wb, x)
+        lines = kb * 1024 // 64
+        rows.append(Row(f"micro_writeback/{kb}KiB", t * 1e6,
+                        f"ns_per_line={t/lines*1e9:.1f}"))
+    return rows
+
+
+# -- Fig 9: atomics / contention ---------------------------------------------------
+
+def micro_atomics(n_updates: int = 1 << 14) -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    for tier, collide in (("hbm", False), ("hbm", True),
+                          ("host", False), ("host", True)):
+        idx = (np.zeros(n_updates, np.int32) if collide
+               else rng.integers(0, n_updates, n_updates).astype(np.int32))
+        target = place(jnp.zeros(n_updates, jnp.float32), tier)
+        updates = jnp.ones(n_updates, jnp.float32)
+        ii = jnp.asarray(idx)
+
+        @jax.jit
+        def scatter_add(t, i, u):
+            return t.at[i].add(u)
+
+        t = time_fn(scatter_add, target, ii, updates)
+        rows.append(Row(
+            f"micro_atomics/{tier}/{'collide' if collide else 'spread'}",
+            t * 1e6, f"ns_per_update={t/n_updates*1e9:.2f}"))
+    return rows
+
+
+# -- Fig 11: cache-utilization heatmap (working set x stride) -----------------------
+
+def micro_cache_heatmap() -> list:
+    rows = []
+    for ws_kb in (32, 256, 2048, 16384):
+        n = ws_kb * 256
+        perm = np.random.default_rng(1).permutation(n).astype(np.int32)
+        p = jnp.asarray(perm)
+
+        @jax.jit
+        def sweep(pp):
+            def body(i, acc):
+                return acc + pp[acc % n]
+            return jax.lax.fori_loop(0, 4096, body, jnp.int32(0))
+
+        t = time_fn(sweep, p)
+        rows.append(Row(f"micro_cache_heatmap/ws={ws_kb}KiB", t * 1e6,
+                        f"ns_per_access={t/4096*1e9:.1f}"))
+    return rows
+
+
+# -- Fig 16/19/20: prefetch + copy engine -------------------------------------------
+
+def micro_prefetch(mb: int = 8) -> list:
+    """Overlap benefit: sync fetch+compute vs async prefetched (§5.2 DSA)."""
+    rows = []
+    n = mb * (1 << 20) // 4
+    layers = [place(jnp.arange(n, dtype=jnp.float32) + i, "host")
+              for i in range(4)]
+
+    @jax.jit
+    def compute(x):
+        return jnp.tanh(x).sum()
+
+    def run_sync():
+        acc = 0.0
+        for h in layers:
+            d = place(h, "hbm")
+            jax.block_until_ready(d)          # serialized copy
+            acc = acc + compute(d)
+        return acc
+
+    def run_prefetch():
+        bufs = [place(layers[0], "hbm")]
+        acc = 0.0
+        for i, h in enumerate(layers):
+            if i + 1 < len(layers):
+                bufs.append(place(layers[i + 1], "hbm"))  # async dispatch
+            acc = acc + compute(bufs[i])
+        return acc
+
+    t_sync = time_fn(run_sync)
+    t_pre = time_fn(run_prefetch)
+    rows.append(Row("micro_prefetch/sync", t_sync * 1e6, "mode=copy-then-compute"))
+    rows.append(Row("micro_prefetch/overlap", t_pre * 1e6,
+                    f"speedup={t_sync/max(t_pre,1e-9):.2f}x"))
+    return rows
+
+
+def micro_copy_engine(sizes_kb=(64, 1024, 8192)) -> list:
+    """Bulk device_put vs elementwise copy (DSA vs memcpy, Fig 19/20)."""
+    rows = []
+    for kb in sizes_kb:
+        x = place(jnp.arange(kb * 256, dtype=jnp.float32), "host")
+
+        def bulk(a):
+            return place(a, "hbm")
+
+        @jax.jit
+        def elementwise(a):
+            return a * 1.0
+
+        tb = time_fn(bulk, x)
+        te = time_fn(elementwise, x)
+        gib = kb / (1 << 20)
+        rows.append(Row(f"micro_copy/bulk/{kb}KiB", tb * 1e6,
+                        f"GiB_s={gib/tb:.2f}"))
+        rows.append(Row(f"micro_copy/elementwise/{kb}KiB", te * 1e6,
+                        f"GiB_s={gib/te:.2f}"))
+    return rows
+
+
+# -- Fig 10 / §3.7: lock-free data structures on tiers -----------------------
+
+def micro_lfds(n_ops: int = 512, n_elems: int = 1 << 12,
+               dim: int = 16) -> list:
+    """Queue (linear access, SPSC ring) and map (random access, open hash)
+    ops on each tier — the paper's LFDS study. The JAX analogue is the
+    array-backed structure with functional updates; 'Same local' vs remote
+    becomes hbm vs host placement."""
+    import numpy as np
+    rows = []
+    rng = np.random.default_rng(0)
+
+    @jax.jit
+    def queue_round(buf, head, vals):
+        # enqueue n then dequeue n (SPSC ring, linear access)
+        n = vals.shape[0]
+        idx = (head + jnp.arange(n)) % buf.shape[0]
+        buf = buf.at[idx].set(vals)
+        out = buf[(head + jnp.arange(n)) % buf.shape[0]]
+        return buf, head + n, out.sum()
+
+    @jax.jit
+    def map_round(table, keys, vals):
+        # update + get at hashed slots (random access)
+        slots = ((keys * jnp.uint32(2654435761))
+                 % jnp.uint32(table.shape[0])).astype(jnp.int32)
+        table = table.at[slots].set(vals)
+        got = table[slots]
+        return table, got.sum()
+
+    vals = jnp.asarray(rng.normal(size=(n_ops, dim)), jnp.float32)
+    keys = jnp.asarray(rng.integers(0, 1 << 30, n_ops), jnp.uint32)
+    for tier in TIERS:
+        buf = place(jnp.zeros((n_elems, dim), jnp.float32), tier)
+
+        def q_op():
+            b = place(buf, "hbm") if tier == "host" else buf
+            return queue_round(b, jnp.int32(0), vals)
+
+        def m_op():
+            t = place(buf, "hbm") if tier == "host" else buf
+            return map_round(t, keys, vals)
+
+        tq = time_fn(q_op)
+        tm = time_fn(m_op)
+        rows.append(Row(f"micro_lfds/queue/{tier}", tq * 1e6,
+                        f"ops_s={2*n_ops/tq:.0f}"))
+        rows.append(Row(f"micro_lfds/map/{tier}", tm * 1e6,
+                        f"ops_s={2*n_ops/tm:.0f}"))
+    return rows
+
+
+ALL_MICRO = [micro_latency, micro_bandwidth_scaling, micro_loaded_latency,
+             micro_weighted_interleave, micro_writeback, micro_atomics,
+             micro_cache_heatmap, micro_prefetch, micro_copy_engine,
+             micro_lfds]

@@ -1,0 +1,132 @@
+"""Pallas TPU flash attention (fwd): online-softmax over KV blocks.
+
+Grid: (batch*q_heads, num_q_blocks, num_kv_blocks) with the KV axis
+'arbitrary' (sequential) so the running (m, l, acc) scratch carries across
+KV steps. Block shapes are MXU-aligned (q_block x d and kv_block x d tiles
+resident in VMEM); GQA maps each q-head program to its kv head via the
+index_map. Causal masking skips fully-masked KV blocks via pl.when.
+
+VMEM budget per program ~ (q_blk + 2*kv_blk) * d * 2B + q_blk*(d+256)*4B —
+e.g. q_blk=kv_blk=512, d=128: ~0.7 MiB, far under the ~128 MiB/core VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128   # TPU lane width; scratch vectors are (q_blk, LANES)
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                scale: float, causal: bool, window: int,
+                q_blk: int, kv_blk: int, n_kv: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = qi * q_blk
+    k0 = kj * kv_blk
+
+    # Skip KV blocks entirely above the causal diagonal / below the window.
+    needed = True
+    if causal:
+        needed = k0 <= q0 + q_blk - 1
+    if window > 0:
+        needed = jnp.logical_and(needed, k0 + kv_blk - 1 > q0 - window)
+
+    @pl.when(needed if not isinstance(needed, bool) else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (q_blk, d)
+        k = k_ref[0].astype(jnp.float32)            # (kv_blk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (q_blk, kv_blk)
+        q_pos = q0 + jax.lax.broadcasted_iota(jnp.int32, (q_blk, kv_blk), 0)
+        k_pos = k0 + jax.lax.broadcasted_iota(jnp.int32, (q_blk, kv_blk), 1)
+        mask = jnp.ones((q_blk, kv_blk), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                        # (q_blk, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)              # (q_blk, 1)
+        p = jnp.exp(s - m_new)                       # (q_blk, kv_blk)
+        l_new = alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "q_blk", "kv_blk",
+                     "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: float | None = None, q_blk: int = 512,
+                    kv_blk: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, Sq, d); k, v: (B, Hkv, Skv, d) -> (B, Hq, Sq, d)."""
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Skv, _ = k.shape
+    G = Hq // Hkv
+    scale = d ** -0.5 if scale is None else scale
+    q_blk = min(q_blk, Sq)
+    kv_blk = min(kv_blk, Skv)
+    assert Sq % q_blk == 0 and Skv % kv_blk == 0, (Sq, q_blk, Skv, kv_blk)
+    n_q = Sq // q_blk
+    n_kv = Skv // kv_blk
+
+    qf = q.reshape(B * Hq, Sq, d)
+    kf = k.reshape(B * Hkv, Skv, d)
+    vf = v.reshape(B * Hkv, Skv, d)
+
+    def kv_head(bh):
+        return (bh // Hq) * Hkv + (bh % Hq) // G
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, window=window,
+        q_blk=q_blk, kv_blk=kv_blk, n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, q_blk, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_blk, d), lambda b, i, j: (kv_head(b), j, 0)),
+            pl.BlockSpec((1, kv_blk, d), lambda b, i, j: (kv_head(b), j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, LANES), jnp.float32),   # running max m
+            pltpu.VMEM((q_blk, LANES), jnp.float32),   # running sum l
+            pltpu.VMEM((q_blk, d), jnp.float32),       # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, d)

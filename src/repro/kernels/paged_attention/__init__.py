@@ -1,0 +1,2 @@
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    paged_attention, paged_attention_ref)

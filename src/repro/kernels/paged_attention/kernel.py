@@ -1,0 +1,113 @@
+"""Pallas TPU paged decode attention (vLLM-style block-table indirection).
+
+The block table rides in scalar-prefetch memory (SMEM) so each grid step's
+``index_map`` dereferences it to pick WHICH KV page to DMA into VMEM — the
+kernel-level analogue of the paper's pointer-chasing microbenchmark, and the
+mechanism that makes tier-interleaved KV pages (repro.core.placement)
+addressable: the table maps logical pages to wherever the pager put them.
+
+Grid: (B * Hkv, pages_per_seq); the page axis is sequential with flash
+accumulators in VMEM scratch. One query token per sequence (decode).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(block_table, seq_lens,            # scalar-prefetch (SMEM)
+            q_ref, k_ref, v_ref, o_ref,       # blocks (VMEM)
+            m_ref, l_ref, acc_ref, *,
+            page: int, n_pages_per_seq: int, scale: float, G: int,
+            hkv: int):
+    bh = pl.program_id(0)
+    j = pl.program_id(1)
+    b = bh // hkv
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (G, d)
+    k = k_ref[0].astype(jnp.float32)                 # (page, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (G, page), 1)
+    valid = pos < seq_lens[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = jnp.broadcast_to(
+        alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True),
+        l_ref.shape)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == n_pages_per_seq - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_table: jax.Array, seq_lens: jax.Array, *,
+                    scale: float | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, d); pages: (n_pages, page, Hkv, d);
+    block_table: (B, pages_per_seq); seq_lens: (B,) -> (B, Hq, d)."""
+    B, Hq, d = q.shape
+    n_pages, page, Hkv, _ = k_pages.shape
+    G = Hq // Hkv
+    pps = block_table.shape[1]
+    scale = d ** -0.5 if scale is None else scale
+
+    # layouts: q -> (B*Hkv, G, d); pages -> (n_pages, Hkv, page, d)
+    qf = q.reshape(B, Hkv, G, d).reshape(B * Hkv, G, d)
+    kf = k_pages.transpose(0, 2, 1, 3).reshape(n_pages * Hkv, page, d)
+    vf = v_pages.transpose(0, 2, 1, 3).reshape(n_pages * Hkv, page, d)
+
+    def page_map(bh, j, table, lens):
+        b = bh // Hkv
+        h = bh % Hkv
+        return (table[b, j] * Hkv + h, 0, 0)
+
+    kernel = functools.partial(_kernel, page=page, n_pages_per_seq=pps,
+                               scale=scale, G=G, hkv=Hkv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * Hkv, pps),
+        in_specs=[
+            pl.BlockSpec((1, G, d), lambda bh, j, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, page, d), page_map),
+            pl.BlockSpec((1, page, d), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, G, d), lambda bh, j, *_: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, LANES), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, d), q.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, qf, kf, vf)
+    return out.reshape(B, Hkv, G, d).reshape(B, Hq, d)

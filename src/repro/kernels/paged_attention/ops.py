@@ -1,0 +1,19 @@
+"""jit'd public wrapper for paged decode attention."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention as _kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def paged_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                    scale=None, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel(q, k_pages, v_pages, block_table, seq_lens,
+                   scale=scale, interpret=interpret)
+
+
+__all__ = ["paged_attention", "paged_attention_ref"]

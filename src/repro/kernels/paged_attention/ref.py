@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for paged decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_table: jax.Array,
+                        seq_lens: jax.Array,
+                        scale: float | None = None) -> jax.Array:
+    """Decode attention over paged KV.
+
+    q:           (B, Hq, d) — one query token per sequence
+    k/v_pages:   (n_pages, page_size, Hkv, d) — the global page pool
+    block_table: (B, pages_per_seq) int32 — page ids per sequence
+    seq_lens:    (B,) int32 — valid token count per sequence
+    returns      (B, Hq, d)
+    """
+    B, Hq, d = q.shape
+    n_pages, page, Hkv, _ = k_pages.shape
+    G = Hq // Hkv
+    scale = d ** -0.5 if scale is None else scale
+    # gather each sequence's pages -> (B, pages_per_seq*page, Hkv, d)
+    k_seq = k_pages[block_table].reshape(B, -1, Hkv, d)
+    v_seq = v_pages[block_table].reshape(B, -1, Hkv, d)
+    S = k_seq.shape[1]
+    qg = q.reshape(B, Hkv, G, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k_seq.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, :] < seq_lens[:, None]     # (B, S)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_seq.astype(jnp.float32))
+    return out.reshape(B, Hq, d).astype(q.dtype)

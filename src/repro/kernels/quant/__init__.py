@@ -1,0 +1,2 @@
+from repro.kernels.quant.ops import (  # noqa: F401
+    dequantize, dequantize_ref, quantize, quantize_ref)

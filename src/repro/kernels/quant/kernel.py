@@ -1,0 +1,74 @@
+"""Pallas TPU blockwise int8 quant/dequant kernels.
+
+Tiles of (rows, 256) stream HBM->VMEM; each row is one quantization block
+(absmax reduce + scale + round on the VPU). This is the compute the tier
+engine runs before pushing bytes across the HBM<->host link, so its
+roofline is pure memory bandwidth — tile sizes keep it that way.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256          # quantization block (row length)
+ROWS = 256           # rows per grid step -> 256 KiB f32 tile in VMEM
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)              # (ROWS, BLOCK)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scales = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scales), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = jnp.broadcast_to(scales, s_ref.shape)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32)
+    x_ref[...] = (q * s_ref[:, :1]).astype(x_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize(x: jax.Array, block: int = BLOCK, *,
+             interpret: bool = True):
+    """x: (N,) with N % block == 0 -> (q int8 (N,), scales f32 (N/block,))."""
+    n = x.shape[0]
+    nb = n // block
+    rows = min(ROWS, nb)
+    assert nb % rows == 0, (nb, rows)
+    xb = x.reshape(nb, block)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, 128), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int8),
+                   jax.ShapeDtypeStruct((nb, 128), jnp.float32)],
+        interpret=interpret,
+    )(xb)
+    return q.reshape(-1), s[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequantize(q: jax.Array, scales: jax.Array, block: int = BLOCK, *,
+               interpret: bool = True) -> jax.Array:
+    nb = q.shape[0] // block
+    rows = min(ROWS, nb)
+    assert nb % rows == 0
+    qb = q.reshape(nb, block)
+    sb = jnp.broadcast_to(scales[:, None], (nb, 128))
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(qb, sb)
+    return x.reshape(-1)

@@ -1,0 +1,23 @@
+"""jit'd public wrappers for the quant kernels."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.quant.kernel import dequantize as _deq, quantize as _q
+from repro.kernels.quant.ref import dequantize_ref, quantize_ref
+
+
+def quantize(x, block: int = 256, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _q(x, block, interpret=interpret)
+
+
+def dequantize(q, scales, block: int = 256, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _deq(q, scales, block, interpret=interpret)
+
+
+__all__ = ["quantize", "dequantize", "quantize_ref", "dequantize_ref"]

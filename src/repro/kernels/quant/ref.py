@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for blockwise int8 quantize/dequantize.
+
+Matches repro.core.compression semantics (symmetric, per-block absmax
+scales) — the transfer-compression hot loop for tier offload and gradient
+compression.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jax.Array, block: int = 256):
+    """x: (N,) f32/bf16 with N % block == 0 ->
+    (q int8 (N,), scales f32 (N/block,))."""
+    blocks = x.astype(jnp.float32).reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scales = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scales), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scales[:, 0]
+
+
+def dequantize_ref(q: jax.Array, scales: jax.Array, block: int = 256):
+    return (q.reshape(-1, block).astype(jnp.float32)
+            * scales[:, None]).reshape(-1)

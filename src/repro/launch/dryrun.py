@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the appropriate step function from
+ShapeDtypeStruct stand-ins (no allocation), compiles it for the production
+mesh, and records memory_analysis / cost_analysis / collective bytes for the
+roofline (EXPERIMENTS.md). The 512 placeholder host devices exist ONLY in
+this process — the XLA_FLAGS line above runs before any other import.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen2-72b --shape decode_32k --multi-pod
+  python -m repro.launch.dryrun --all            # full 40-cell sweep, 1 pod
+  python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import (ParallelConfig, get_config, get_shape,
+                               list_archs, SHAPES)
+from repro.core.placement import plan_training_placement
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh, num_chips
+from repro.models.context import MCtx
+from repro.models.model import Model
+from repro.optim import adamw, schedule
+from repro.roofline import hw
+from repro.roofline.analysis import (Roofline, collective_stats,
+                                     model_flops_per_step)
+from repro.roofline.hlo_walk import analyze as hlo_analyze
+from repro.training.step import abstract_train_state, make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _mesh_label(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def _cost_dict(compiled):
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0]
+        return dict(c) if c else {}
+    except Exception as e:      # noqa: BLE001
+        return {"error": str(e)}
+
+
+def _memory_dict(compiled):
+    try:
+        m = compiled.memory_analysis()
+        if m is None:
+            return {}
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes", "host_argument_size_in_bytes",
+                "host_output_size_in_bytes", "host_temp_size_in_bytes")
+        return {k: int(getattr(m, k)) for k in keys if hasattr(m, k)}
+    except Exception as e:      # noqa: BLE001
+        return {"error": str(e)}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               parallel: ParallelConfig = None, q_chunk: int = 512,
+               save_hlo: bool = False, serve_2d: bool = False,
+               microbatches: int = 0, compress_pod: bool = False):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = num_chips(mesh)
+    label = _mesh_label(multi_pod)
+
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return {"arch": arch, "shape": shape_name, "mesh": label,
+                "status": "skip(full-attn)",
+                "note": "long_500k needs sub-quadratic attention "
+                        "(DESIGN.md §Arch-applicability)"}
+
+    if parallel is None:
+        # Serving: small models use pure TP (weights replicated over 'data',
+        # no gathers on the decode critical path); models whose TP-sharded
+        # weights exceed ~1/4 of HBM use 2D sharding (FSDP over 'data') and
+        # pay a per-layer all-gather. Training: FSDP + microbatching sized
+        # so each data shard sees ~8k tokens per microbatch.
+        n_micro = 1
+        if shape.kind == "train":
+            dp = 16 * (2 if multi_pod else 1)
+            tokens_per_shard = shape.global_batch // dp * shape.seq_len
+            n_micro = microbatches or max(1, tokens_per_shard // 8192)
+            while shape.global_batch % (n_micro * dp) and n_micro > 1:
+                n_micro //= 2
+            fsdp = True
+        else:
+            tp_bytes = 2 * cfg.num_params / 16
+            fsdp = tp_bytes > hw.HBM_CAPACITY / 4
+        parallel = ParallelConfig(fsdp=fsdp, microbatches=n_micro,
+                                  serve_2d_weights=serve_2d,
+                                  gradient_compression=compress_pod)
+    seq_sharded = shape_name == "long_500k"
+    model = Model.create(cfg, mesh, parallel,
+                         seq_sharded_cache=seq_sharded)
+    mctx = model.mctx
+    batch = input_specs(cfg, shape, mctx)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        plan = plan_training_placement(cfg, chips)
+        params_c, master, opt_state = abstract_train_state(model, plan)
+        lr_fn = partial(schedule.warmup_cosine, peak_lr=3e-4,
+                        warmup_steps=100, total_steps=10000)
+        step = make_train_step(model, adamw.AdamWConfig(), lr_fn,
+                               compress_pod_grads=(
+                                   parallel.gradient_compression),
+                               offload_plan=plan)
+        # NOTE: host placement of outputs happens via in-body device_put in
+        # the step (out_shardings with memory kinds trips an XLA RET_CHECK).
+        fn = jax.jit(step, donate_argnums=(0, 1, 2))
+        lowered = fn.lower(params_c, master, opt_state, batch)
+        placement = {"kinds": plan.kinds,
+                     "hbm_used_gib": round(plan.hbm_used / 2**30, 2),
+                     "host_used_gib": round(plan.host_used / 2**30, 2),
+                     "notes": plan.notes}
+    elif shape.kind == "prefill":
+        params = model.abstract_params(dtype=jnp.bfloat16)
+        fn = jax.jit(lambda p, b: model.prefill(p, b))
+        lowered = fn.lower(params, batch)
+        placement = {"kinds": {"params": "device"}}
+    else:  # decode
+        params = model.abstract_params(dtype=jnp.bfloat16)
+        cache = model.abstract_cache(shape.global_batch, shape.seq_len)
+        tokens = batch["tokens"]
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = jax.jit(lambda p, c, t, i: model.decode(p, c, t, i),
+                     donate_argnums=(1,))
+        lowered = fn.lower(params, cache, tokens, pos)
+        placement = {"kinds": {"params": "device", "cache": "device"},
+                     "seq_sharded_cache": seq_sharded}
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = _cost_dict(compiled)
+    memory = _memory_dict(compiled)
+    hlo = compiled.as_text()
+    # Trip-count-aware walk (cost_analysis counts while bodies once).
+    walk = hlo_analyze(hlo)
+
+    mf = model_flops_per_step(cfg, shape, chips,
+                              backward=(shape.kind == "train"))
+    roof = Roofline.build(
+        arch=arch, shape=shape_name, mesh=label, flops=walk["flops"],
+        hbm_bytes=walk["bytes"], collective_bytes=walk["collective_bytes"],
+        model_flops=mf, peak_memory=memory.get("temp_size_in_bytes"),
+        collective_detail=walk["collectives_by_kind"])
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": label,
+           "status": "ok", "chips": chips,
+           "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+           "cost_analysis": {k: float(v) for k, v in cost.items()
+                             if isinstance(v, (int, float))
+                             and "{" not in k},
+           "memory_analysis": memory,
+           "hlo_walk": {k: v for k, v in walk.items()
+                        if k != "warnings"},
+           "hlo_walk_warnings": walk["warnings"],
+           "placement": placement,
+           "roofline": roof.to_json()}
+    if save_hlo:
+        rec["hlo_path"] = str(OUT_DIR / f"{arch}_{shape_name}_{label}.hlo")
+        Path(rec["hlo_path"]).write_text(hlo)
+    return rec
+
+
+def run_and_save(arch, shape_name, multi_pod, tag="", **kw):
+    label = _mesh_label(multi_pod)
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    out = OUT_DIR / f"{arch}_{shape_name}_{label}{suffix}.json"
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod, **kw)
+    except Exception as e:      # noqa: BLE001
+        rec = {"arch": arch, "shape": shape_name, "mesh": label,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    out.write_text(json.dumps(rec, indent=2, default=str))
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" bottleneck={r['bottleneck']}"
+                 f" frac={r['roofline_fraction']:.3f}"
+                 f" compile={rec['compile_s']}s")
+        print(json.dumps(rec["memory_analysis"]))       # proves it fits
+        print(json.dumps(rec["cost_analysis"]))         # FLOPs/bytes
+    print(f"[dryrun] {arch} {shape_name} {label}: {status}{extra}",
+          flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--serve-2d", action="store_true")
+    ap.add_argument("--compress-pod-grads", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--tag", default="", help="suffix for the output json")
+    args = ap.parse_args()
+
+    if args.all:
+        for arch in list_archs():
+            for shape_name in SHAPES:
+                run_and_save(arch, shape_name, args.multi_pod,
+                             q_chunk=args.q_chunk,
+                             save_hlo=args.save_hlo)
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        run_and_save(args.arch, args.shape, args.multi_pod,
+                     q_chunk=args.q_chunk, save_hlo=args.save_hlo,
+                     serve_2d=args.serve_2d, compress_pod=args.compress_pod_grads,
+                     microbatches=args.microbatches, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+train/prefill/decode steps from these. Modality frontends are STUBS: for
+[vlm]/[audio] archs the specs provide precomputed patch/frame embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig, ShapeConfig
+from repro.models.context import MCtx
+from repro.models.sharding import spec_for
+
+
+def _sds(shape, dtype, mctx: MCtx, axes):
+    sharding = NamedSharding(mctx.mesh,
+                             spec_for(axes, mctx.rules, shape, mctx.mesh))
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                mctx: MCtx) -> dict[str, Any]:
+    """Batch ShapeDtypeStructs for (arch, shape) under the mesh in mctx."""
+    B, S = shape.global_batch, shape.seq_len
+    bax = ("act_batch", "act_seq")
+
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        if cfg.encoder_decoder:
+            batch["frames"] = _sds((B, S, cfg.d_model), "bfloat16",
+                                   mctx, (*bax, None))
+            batch["tokens"] = _sds((B, S), "int32", mctx, bax)
+        elif cfg.frontend == "vision":
+            batch["embeds"] = _sds((B, S, cfg.d_model), "bfloat16",
+                                   mctx, (*bax, None))
+            batch["positions"] = _sds((3, B, S), "int32",
+                                      mctx, (None, *bax))
+        elif cfg.frontend == "audio":
+            batch["embeds"] = _sds((B, S, cfg.d_model), "bfloat16",
+                                   mctx, (*bax, None))
+        else:
+            batch["tokens"] = _sds((B, S), "int32", mctx, bax)
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), "int32", mctx, bax)
+        return batch
+
+    # decode: one new token against a seq_len cache
+    batch = {"tokens": _sds((B, 1), "int32", mctx, ("act_batch", None))}
+    return batch
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, rng=None,
+               mctx: Optional[MCtx] = None) -> dict[str, Any]:
+    """Concrete random batch matching input_specs (smoke tests/examples)."""
+    import numpy as np
+    rng = np.random.default_rng(0 if rng is None else rng)
+    B, S = shape.global_batch, shape.seq_len
+    out: dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.encoder_decoder:
+            out["frames"] = jnp.asarray(
+                rng.normal(size=(B, S, cfg.d_model)).astype("float32"),
+                dtype=jnp.bfloat16)
+            out["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), dtype=jnp.int32)
+        elif cfg.frontend == "vision":
+            out["embeds"] = jnp.asarray(
+                rng.normal(size=(B, S, cfg.d_model)).astype("float32"),
+                dtype=jnp.bfloat16)
+            out["positions"] = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S))
+        elif cfg.frontend == "audio":
+            out["embeds"] = jnp.asarray(
+                rng.normal(size=(B, S, cfg.d_model)).astype("float32"),
+                dtype=jnp.bfloat16)
+        else:
+            out["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), dtype=jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), dtype=jnp.int32)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, 1)), dtype=jnp.int32)
+    return out

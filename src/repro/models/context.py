@@ -1,0 +1,66 @@
+"""MCtx: mesh + parallelism context threaded through model functions."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.config.base import ParallelConfig
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+from repro.models.sharding import constrain, logical_rules
+
+
+@dataclasses.dataclass
+class MCtx:
+    mesh: Mesh
+    parallel: ParallelConfig = ParallelConfig()
+    seq_sharded_cache: bool = False   # long-context: shard KV seq over 'data'
+    manual_pod: bool = False          # inside a shard_map manual over 'pod'
+    rules: dict = dataclasses.field(default=None)  # type: ignore
+
+    def __post_init__(self):
+        if self.rules is None:
+            self.rules = logical_rules(self.mesh, self.parallel,
+                                       self.seq_sharded_cache)
+            if self.manual_pod:
+                self.rules = dict(self.rules)
+                self.rules["act_batch"] = tuple(
+                    a for a in self.rules["act_batch"] if a != POD_AXIS)
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        axes = tuple(a for a in (POD_AXIS, DATA_AXIS)
+                     if a in self.mesh.axis_names)
+        if self.manual_pod:
+            axes = tuple(a for a in axes if a != POD_AXIS)
+        return axes
+
+    @property
+    def data_size(self) -> int:
+        return self.mesh.shape.get(DATA_AXIS, 1)
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape.get(MODEL_AXIS, 1)
+
+    def constrain(self, x, axes: tuple[Optional[str], ...]):
+        return constrain(x, self.mesh, self.rules, axes)
+
+    @property
+    def cache_seq_axis(self) -> Optional[str]:
+        return "act_cache_seq"
+
+    def constrain_kv(self, kv: dict):
+        """Sharding constraints for per-layer cache leaves (inside scans)."""
+        if kv is None:
+            return None
+        out = {}
+        for k, v in kv.items():
+            if k in ("k", "v", "ckv", "k_rope"):
+                axes = ("act_batch", "act_cache_seq") + (None,) * (v.ndim - 2)
+                out[k] = self.constrain(v, axes)
+            else:
+                out[k] = v
+        return out

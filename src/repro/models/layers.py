@@ -1,0 +1,178 @@
+"""Shared layer primitives: norms, rotary embeddings, MLPs, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.models.params import ParamSpec
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), (None,), init="ones")
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (incl. M-RoPE for qwen2-vl)
+# --------------------------------------------------------------------------
+
+MROPE_SECTIONS = (16, 24, 24)   # qwen2-vl split of head_dim/2 across (t, h, w)
+
+
+def _rope_angles(positions: jax.Array, dim_half: int, theta: float):
+    """positions: (..., S) -> angles (..., S, dim_half)."""
+    freqs = 1.0 / (theta ** (np.arange(0, dim_half, dtype=np.float32)
+                             / dim_half))
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope: bool = False) -> jax.Array:
+    """x: (B, S, H, Dh). positions: (B, S) or (3, B, S) for M-RoPE."""
+    dh = x.shape[-1]
+    half = dh // 2
+    if mrope:
+        # positions: (3, B, S); each section of the half-dim uses its own axis
+        secs = np.array(MROPE_SECTIONS, dtype=np.int64)
+        secs = (secs * half // secs.sum()).tolist()
+        secs[-1] = half - sum(secs[:-1])
+        angle_parts = []
+        off = 0
+        for row, sec in enumerate(secs):
+            freqs = 1.0 / (theta ** (np.arange(off, off + sec,
+                                               dtype=np.float32) / half))
+            ang = positions[row][..., None].astype(jnp.float32) * freqs
+            angle_parts.append(ang)
+            off += sec
+        angles = jnp.concatenate(angle_parts, axis=-1)   # (B, S, half)
+    else:
+        angles = _rope_angles(positions, half, theta)     # (B, S, half)
+    cos = jnp.cos(angles)[..., None, :]                   # (B, S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(positions: jax.Array, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings. positions: (S,) -> (S, d)."""
+    half = d // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half, dtype=np.float32)
+                   / max(1, half - 1))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp_specs(d: int, d_ff: int, gated: bool = True) -> dict:
+    if gated:
+        return {
+            "w_gate": ParamSpec((d, d_ff), ("embed", "mlp")),
+            "w_up": ParamSpec((d, d_ff), ("embed", "mlp")),
+            "w_down": ParamSpec((d_ff, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": ParamSpec((d, d_ff), ("embed", "mlp")),
+        "b_up": ParamSpec((d_ff,), ("mlp",), init="zeros"),
+        "w_down": ParamSpec((d_ff, d), ("mlp", "embed")),
+        "b_down": ParamSpec((d,), (None,), init="zeros"),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, gated: bool = True,
+              mctx=None) -> jax.Array:
+    dt = x.dtype
+
+    def tp(h):
+        # pin the hidden dim to 'model' (TP) so GSPMD never resolves the
+        # layout by gathering whole weights (§Perf A3)
+        if mctx is None:
+            return h
+        return mctx.constrain(h, ("act_batch", None, "act_mlp"))
+
+    if gated:
+        h = tp(jax.nn.silu(x @ p["w_gate"].astype(dt))
+               * (x @ p["w_up"].astype(dt)))
+        return h @ p["w_down"].astype(dt)
+    h = tp(jax.nn.gelu(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt)))
+    return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Embeddings / unembedding
+# --------------------------------------------------------------------------
+
+
+def embedding_specs(cfg: ModelConfig) -> dict:
+    specs = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model),
+                              ("vocab", "embed"), init="small_normal")}
+    if not cfg.tie_embeddings:
+        specs["out"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab"))
+    return specs
+
+
+def embed_tokens(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["tok"].astype(dtype), tokens, axis=0)
+
+
+def unembed(p: dict, x: jax.Array, tied: bool) -> jax.Array:
+    w = p["tok"].T if tied else p["out"]
+    return x @ w.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+
+def chunked_ce_loss(x: jax.Array, emb_params: dict, labels: jax.Array,
+                    tied: bool, chunk: int = 512) -> jax.Array:
+    """Cross-entropy over (B, S, d) hidden states, scanning sequence chunks.
+
+    The unembedding matmul happens inside the scan so the full (B, S, vocab)
+    logits tensor is never materialized (vocab dim stays 'model'-sharded;
+    the per-chunk logits are the only transient).
+    """
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    def one(x_c, labels_c):
+        logits = unembed(emb_params, x_c, tied).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, labels_c[..., None],
+                                     axis=-1)[..., 0]
+        return jnp.sum(lse - picked)
+
+    def body(acc, args):
+        return acc + one(*args), None
+
+    x_main = x[:, :n * chunk].reshape(B, n, chunk, d).swapaxes(0, 1)
+    l_main = labels[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (x_main, l_main))
+    if rem:
+        total = total + one(x[:, n * chunk:], labels[:, n * chunk:])
+    return total / (B * S)

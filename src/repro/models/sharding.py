@@ -1,0 +1,157 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style), plus helpers.
+
+Rules depend on the ParallelConfig (FSDP on/off) and the mesh's axis names.
+Activations are annotated at block boundaries with
+``with_sharding_constraint``; weights get NamedShardings attached to their
+ShapeDtypeStructs for the dry-run and to real arrays at init.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ParallelConfig
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+
+
+def logical_rules(mesh: Mesh, parallel: ParallelConfig,
+                  seq_sharded_cache: bool = False) -> dict[str, object]:
+    names = set(mesh.axis_names)
+    fsdp = DATA_AXIS if (parallel.fsdp and DATA_AXIS in names) else None
+    batch_axes = tuple(a for a in (POD_AXIS, DATA_AXIS) if a in names)
+    ep_axes = tuple(a for a in (DATA_AXIS, MODEL_AXIS) if a in names)
+    # KV caches are sharded along the *sequence* dim (flash-decoding style):
+    # GQA kv-head counts (4-16) can't split a 16-way model axis, the
+    # sequence always can. long_500k (batch=1) also spreads over 'data'.
+    cache_seq = (ep_axes if seq_sharded_cache
+                 else ((MODEL_AXIS,) if MODEL_AXIS in names else ()))
+    if parallel.serve_2d_weights:
+        # Weight-stationary decode (§Perf C2): every weight is 2D-sharded
+        # with its *embed* dim on 'model' and its hidden dim on 'data', and
+        # the residual stream is d-sharded over 'model'. Contractions then
+        # match the resident shard on at least one side, so XLA reduces
+        # tiny decode activations (psum of MBs) instead of gathering GBs of
+        # weights each step.
+        return {
+            "embed": MODEL_AXIS,
+            "mlp": DATA_AXIS,
+            "heads": DATA_AXIS,
+            "kv_heads": None,
+            "vocab": DATA_AXIS,
+            "experts": ep_axes,
+            "layers": None,
+            "act_batch": batch_axes,
+            "act_seq": None,
+            "act_cache_seq": cache_seq,
+            "act_heads": None,
+            "act_mlp": DATA_AXIS,
+            "act_embed": MODEL_AXIS,
+            "act_vocab": DATA_AXIS,
+        }
+    return {
+        # weights
+        "embed": fsdp,
+        "mlp": MODEL_AXIS,
+        "heads": MODEL_AXIS,
+        "kv_heads": MODEL_AXIS,
+        "vocab": MODEL_AXIS,
+        "experts": ep_axes,          # EP over (data, model) jointly
+        "layers": None,
+        # activations
+        "act_batch": batch_axes,
+        # Sequence parallelism (Megatron-SP via GSPMD): the residual stream
+        # between blocks is seq-sharded over 'model', shrinking saved remat
+        # activations by the TP degree; XLA inserts the equivalent
+        # all-gather/reduce-scatter pairs around the TP matmuls.
+        "act_seq": (MODEL_AXIS if (parallel.seq_parallel
+                                   and MODEL_AXIS in names) else None),
+        "act_cache_seq": cache_seq,
+        "act_heads": MODEL_AXIS,
+        "act_mlp": MODEL_AXIS,
+        "act_embed": None,
+        "act_vocab": MODEL_AXIS,
+    }
+
+
+def spec_for(axes: tuple[Optional[str], ...], rules: dict[str, object],
+             shape: Optional[tuple[int, ...]] = None,
+             mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec for logical axes; drops mesh axes that don't divide."""
+    parts = []
+    used: set[str] = set()
+    for i, a in enumerate(axes):
+        m = rules.get(a) if a is not None else None
+        # Never map two tensor dims to the same mesh axis.
+        if m is not None and not isinstance(m, tuple):
+            m = (m,)
+        if m is not None:
+            m = tuple(x for x in m if x is not None and x not in used)
+            if shape is not None and mesh is not None and m:
+                # keep only a prefix of axes whose product divides the dim
+                keep = []
+                sz = 1
+                for x in m:
+                    nx = sz * mesh.shape[x]
+                    if shape[i] % nx == 0:
+                        keep.append(x)
+                        sz = nx
+                    else:
+                        break
+                m = tuple(keep)
+            used.update(m)
+            parts.append(m if len(m) > 1 else (m[0] if m else None))
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named_sharding(mesh: Mesh, rules: dict[str, object],
+                   axes: tuple[Optional[str], ...],
+                   shape: Optional[tuple[int, ...]] = None,
+                   memory_kind: Optional[str] = None) -> NamedSharding:
+    spec = spec_for(axes, rules, shape, mesh)
+    if memory_kind is not None:
+        return NamedSharding(mesh, spec, memory_kind=memory_kind)
+    return NamedSharding(mesh, spec)
+
+
+def constrain(x, mesh: Mesh, rules: dict[str, object],
+              axes: tuple[Optional[str], ...]):
+    """with_sharding_constraint by logical activation axes.
+
+    Inside a partial-manual shard_map (e.g. the compressed-pod-grads body,
+    manual over 'pod') the context mesh differs in axis_types; use the
+    ambient abstract mesh so the constraint matches the trace context.
+    """
+    spec = spec_for(axes, rules, x.shape, mesh)
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and getattr(am, "shape_tuple", None):
+            return jax.lax.with_sharding_constraint(x, NamedSharding(am, spec))
+    except Exception:       # noqa: BLE001
+        pass
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_shardings(mesh: Mesh, rules: dict[str, object], axes_tree,
+                    shape_tree=None, memory_kind_tree=None):
+    """Tree of NamedShardings from a tree of logical-axes tuples."""
+    def is_axes(x):
+        return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                            for a in x)
+
+    def mk(axes, shape=None, mk_kind=None):
+        return named_sharding(mesh, rules, axes, shape, mk_kind)
+
+    if shape_tree is None:
+        return jax.tree.map(mk, axes_tree, is_leaf=is_axes)
+    shapes = jax.tree.map(lambda s: s.shape, shape_tree)
+    if memory_kind_tree is None:
+        return jax.tree.map(mk, axes_tree, shapes, is_leaf=is_axes)
+    return jax.tree.map(mk, axes_tree, shapes, memory_kind_tree,
+                        is_leaf=is_axes)

@@ -1,0 +1,175 @@
+"""Mamba2 (SSD) block — chunked scan formulation [arXiv:2405.21060].
+
+Within a chunk the state-space recurrence is computed in its quadratic
+(attention-like) form; across chunks a small recurrent carry
+(B, heads, head_dim, state) propagates. This is the TPU-friendly SSD
+schedule: the quadratic part is MXU work over (chunk x chunk) tiles and the
+carry is tiny, so long_500k decode holds O(1) state instead of a KV cache.
+
+Head layout: inner = expand * d_model = ssm_heads * ssm_head_dim, head-major,
+so sharding `inner` over 'model' shards SSD heads (all SSD math is
+head-local; B/C are shared across heads, replicated — ngroups=1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import rmsnorm, rmsnorm_spec
+from repro.models.params import ParamSpec
+
+CONV_K = 4
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    assert H * P == inner, (H, P, inner)
+    return {
+        "w_z": ParamSpec((d, inner), ("embed", "mlp")),
+        "w_x": ParamSpec((d, inner), ("embed", "mlp")),
+        "w_B": ParamSpec((d, N), ("embed", None)),
+        "w_C": ParamSpec((d, N), ("embed", None)),
+        "w_dt": ParamSpec((d, H), ("embed", "heads")),
+        "dt_bias": ParamSpec((H,), ("heads",), init="zeros"),
+        "A_log": ParamSpec((H,), ("heads",), init="zeros"),
+        "D": ParamSpec((H,), ("heads",), init="ones"),
+        "conv_x": ParamSpec((CONV_K, inner), (None, "mlp")),
+        "conv_B": ParamSpec((CONV_K, N), (None, None)),
+        "conv_C": ParamSpec((CONV_K, N), (None, None)),
+        "norm": rmsnorm_spec(inner),
+        "w_out": ParamSpec((inner, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    return out
+
+
+def _ssd_chunked(xh, Bm, Cm, log_a, dt, chunk: int, carry0=None):
+    """SSD scan. xh: (B,S,H,P); Bm/Cm: (B,S,N); log_a/dt: (B,S,H).
+
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = chunk if S % chunk == 0 else S
+    nc = S // Q
+    xc = xh.reshape(Bsz, nc, Q, H, P)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+    lac = log_a.reshape(Bsz, nc, Q, H)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    if carry0 is None:
+        carry0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    idx = jnp.arange(Q)
+    causal = idx[:, None] >= idx[None, :]         # (Q, Q) j<=i
+
+    def one_chunk(state, args):
+        x_q, B_q, C_q, la_q, dt_q = args          # per-chunk slices
+        cum = jnp.cumsum(la_q, axis=1)            # (B,Q,H) inclusive
+        # intra-chunk: scores[b,h,i,j] = (C_i.B_j) exp(cum_i - cum_j) dt_j
+        cb = jnp.einsum("bin,bjn->bij", C_q, B_q)          # (B,Q,Q)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]    # (B,Q,Q,H) i,j
+        decay = jnp.where(causal[None, :, :, None], decay, -jnp.inf)
+        w = jnp.exp(decay) * dt_q[:, None, :, :]           # (B,Q,Q,H)
+        y = jnp.einsum("bij,bijh,bjhp->bihp", cb.astype(jnp.float32),
+                       w, x_q.astype(jnp.float32))
+        # inter-chunk: y += exp(cum_i) * (C_i . state)
+        y = y + (jnp.einsum("bin,bhpn->bihp", C_q.astype(jnp.float32), state)
+                 * jnp.exp(cum)[..., None])
+        # state update: state' = exp(cum_Q) state + sum_j exp(cum_Q-cum_j) dt_j x_j B_j^T
+        tail = jnp.exp(cum[:, -1:, :] - cum) * dt_q        # (B,Q,H)
+        inc = jnp.einsum("bjh,bjhp,bjn->bhpn", tail,
+                         x_q.astype(jnp.float32), B_q.astype(jnp.float32))
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + inc
+        return state, y
+
+    xs = (xc.swapaxes(0, 1), Bc.swapaxes(0, 1), Cc.swapaxes(0, 1),
+          lac.swapaxes(0, 1), dtc.swapaxes(0, 1))
+    state, ys = jax.lax.scan(one_chunk, carry0, xs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, H, P)
+    return y, state
+
+
+def ssm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                chunk: int = 512) -> tuple[jax.Array, dict]:
+    """Train/prefill Mamba2 block. x: (B, S, d). Returns (out, cache)."""
+    Bsz, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    dt_ = x.dtype
+    z = x @ p["w_z"].astype(dt_)
+    xs = x @ p["w_x"].astype(dt_)
+    Bm = x @ p["w_B"].astype(dt_)
+    Cm = x @ p["w_C"].astype(dt_)
+    dt_raw = x @ p["w_dt"].astype(dt_)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    log_a = A * dt                                             # (B,S,H)
+    xh = xs.reshape(Bsz, S, H, P)
+    y, state = _ssd_chunked(xh, Bm, Cm, log_a, dt, chunk)
+    y = y.astype(dt_) + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(Bsz, S, H * P)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(dt_)
+    # conv cache: last K-1 pre-activation channel inputs
+    def tail(a):
+        return a[:, -(CONV_K - 1):, :].astype(jnp.float32)
+    cache = {"state": state,
+             "conv_x": tail(x @ p["w_x"].astype(dt_)),
+             "conv_B": tail(x @ p["w_B"].astype(dt_)),
+             "conv_C": tail(x @ p["w_C"].astype(dt_))}
+    return out, cache
+
+
+def ssm_decode(p: dict, x: jax.Array, cache: dict,
+               cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One-step SSD recurrence. x: (B, 1, d)."""
+    Bsz, _, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    dt_ = x.dtype
+    z = x[:, 0] @ p["w_z"].astype(dt_)
+    xs_new = x[:, 0] @ p["w_x"].astype(dt_)
+    B_new = x[:, 0] @ p["w_B"].astype(dt_)
+    C_new = x[:, 0] @ p["w_C"].astype(dt_)
+    dt_raw = x[:, 0] @ p["w_dt"].astype(dt_)
+
+    def conv_step(hist, new, w):
+        # hist: (B, K-1, C) fp32; new: (B, C)
+        win = jnp.concatenate([hist, new[:, None].astype(jnp.float32)], 1)
+        out = jnp.einsum("bkc,kc->bc", win, w.astype(jnp.float32))
+        return jax.nn.silu(out).astype(dt_), win[:, 1:]
+
+    xs, conv_x = conv_step(cache["conv_x"], xs_new, p["conv_x"])
+    Bm, conv_B = conv_step(cache["conv_B"], B_new, p["conv_B"])
+    Cm, conv_C = conv_step(cache["conv_C"], C_new, p["conv_C"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(A * dt)                                        # (B,H)
+    xh = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    state = (cache["state"] * a[..., None, None]
+             + jnp.einsum("bh,bhp,bn->bhpn", dt, xh,
+                          Bm.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y.astype(dt_) + xh.astype(dt_) * p["D"].astype(dt_)[None, :, None]
+    y = y.reshape(Bsz, H * P) * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = (y @ p["w_out"].astype(dt_))[:, None, :]
+    return out, {"state": state, "conv_x": conv_x,
+                 "conv_B": conv_B, "conv_C": conv_C}

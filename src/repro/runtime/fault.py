@@ -1,0 +1,123 @@
+"""Fault tolerance: step supervision, retry, straggler mitigation.
+
+At 1000+ nodes, preemptions/ICI flaps/host OOMs are routine. The runtime
+wraps the train loop with:
+
+  * ``StepSupervisor`` — watchdog: a step exceeding ``timeout_factor`` x the
+    trailing median step time is declared hung (straggler/failed host) and
+    raises ``StepTimeout``; the driver restarts from the last checkpoint
+    (in multi-controller deployments the orchestration layer replaces the
+    bad host first; see DESIGN.md).
+  * ``retry_with_checkpoint`` — bounded-retry execution of a step thunk
+    with checkpoint restore between attempts.
+  * ``StragglerStats`` — per-step timing histogram; sustained tail
+    inflation => flag for the elastic layer to shrink the mesh
+    (repro.runtime.elastic).
+"""
+
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from typing import Callable, Optional
+
+
+class StepTimeout(RuntimeError):
+    pass
+
+
+class HostFailure(RuntimeError):
+    pass
+
+
+class StepSupervisor:
+    """Watchdog around blocking step calls."""
+
+    def __init__(self, timeout_factor: float = 5.0,
+                 min_timeout: float = 60.0, history: int = 20):
+        self.timeout_factor = timeout_factor
+        self.min_timeout = min_timeout
+        self.times: list[float] = []
+        self.history = history
+
+    @property
+    def timeout(self) -> float:
+        if not self.times:
+            return self.min_timeout
+        med = statistics.median(self.times)
+        return max(self.min_timeout, self.timeout_factor * med)
+
+    def run(self, fn: Callable, *args):
+        result = {}
+        err = {}
+
+        def target():
+            try:
+                t0 = time.perf_counter()
+                result["out"] = fn(*args)
+                result["dt"] = time.perf_counter() - t0
+            except Exception as e:       # noqa: BLE001
+                err["e"] = e
+
+        th = threading.Thread(target=target, daemon=True)
+        th.start()
+        th.join(self.timeout)
+        if th.is_alive():
+            raise StepTimeout(
+                f"step exceeded {self.timeout:.0f}s "
+                f"(median {statistics.median(self.times) if self.times else 0:.1f}s)")
+        if "e" in err:
+            raise err["e"]
+        self.times.append(result["dt"])
+        self.times = self.times[-self.history:]
+        return result["out"], result["dt"]
+
+
+class StragglerStats:
+    """Flags sustained step-time inflation (p95/median ratio)."""
+
+    def __init__(self, window: int = 50, ratio: float = 1.5):
+        self.window = window
+        self.ratio = ratio
+        self.times: list[float] = []
+
+    def record(self, dt: float):
+        self.times.append(dt)
+        self.times = self.times[-self.window:]
+
+    @property
+    def inflated(self) -> bool:
+        if len(self.times) < 10:
+            return False
+        s = sorted(self.times)
+        med = s[len(s) // 2]
+        p95 = s[int(len(s) * 0.95)]
+        return p95 > self.ratio * med
+
+    def summary(self) -> dict:
+        if not self.times:
+            return {}
+        s = sorted(self.times)
+        return {"median_s": s[len(s) // 2], "p95_s": s[int(len(s) * .95)],
+                "inflated": self.inflated}
+
+
+def retry_with_checkpoint(step_fn: Callable, restore_fn: Callable,
+                          max_retries: int = 3,
+                          supervisor: Optional[StepSupervisor] = None):
+    """Run ``step_fn(state) -> state`` once, retrying through
+    ``restore_fn() -> state`` on failure."""
+    sup = supervisor or StepSupervisor()
+
+    def run(state):
+        attempts = 0
+        while True:
+            try:
+                return sup.run(step_fn, state)
+            except (StepTimeout, HostFailure, RuntimeError) as e:
+                attempts += 1
+                if attempts > max_retries:
+                    raise
+                state = restore_fn()
+    return run

@@ -1,0 +1,16 @@
+import jax
+import pytest
+
+# Smoke tests / benches see the real (1) device count — the 512-device
+# override belongs ONLY to repro.launch.dryrun (see its module header).
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh()
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

@@ -1,0 +1,73 @@
+"""Checkpoint save/restore: roundtrip, retention, resume, corruption."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim import adamw
+
+
+def _state():
+    params = {"w": jnp.arange(12.0).reshape(3, 4),
+              "inner": {"b": jnp.ones((5,))}}
+    opt = adamw.init(params)
+    return params, opt
+
+
+def test_roundtrip_with_namedtuple(tmp_path):
+    params, opt = _state()
+    ckpt.save(tmp_path, 7, (params, opt))
+    like = jax.tree.map(jnp.zeros_like, (params, opt))
+    (p2, o2) = ckpt.restore(tmp_path, 7, like)
+    np.testing.assert_array_equal(np.asarray(p2["w"]),
+                                  np.asarray(params["w"]))
+    assert isinstance(o2, adamw.OptState)
+    np.testing.assert_array_equal(np.asarray(o2.count),
+                                  np.asarray(opt.count))
+
+
+def test_latest_and_retention(tmp_path):
+    params, opt = _state()
+    mgr = CheckpointManager(tmp_path, keep=2, save_async=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, params)
+    assert ckpt.latest_step(tmp_path) == 4
+    kept = sorted(d.name for d in Path(tmp_path).iterdir())
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_restore_or_init(tmp_path):
+    params, opt = _state()
+    mgr = CheckpointManager(tmp_path, save_async=False)
+    state, start = mgr.restore_or_init(lambda: (params, opt))
+    assert start == 0
+    mgr.save(5, state)
+    state2, start2 = mgr.restore_or_init(lambda: (params, opt))
+    assert start2 == 6
+
+
+def test_corruption_detected(tmp_path):
+    params, _ = _state()
+    ckpt.save(tmp_path, 1, params)
+    d = Path(tmp_path) / "step_00000001"
+    shard = next(d.glob("shard_*.npy"))
+    arr = np.load(shard)
+    arr = arr + 1
+    np.save(shard, arr)
+    with pytest.raises(IOError, match="checksum"):
+        ckpt.restore(tmp_path, 1, jax.tree.map(jnp.zeros_like, params))
+
+
+def test_async_save(tmp_path):
+    params, opt = _state()
+    mgr = CheckpointManager(tmp_path, save_async=True)
+    mgr.save(9, (params, opt), extra={"step": 9})
+    mgr.wait()
+    assert ckpt.latest_step(tmp_path) == 9
+    assert ckpt.manifest_extra(tmp_path, 9) == {"step": 9}

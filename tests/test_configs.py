@@ -1,0 +1,91 @@
+"""Assigned-architecture configs: exact public numbers + reduced smoke."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config.base import (SHAPES, ParallelConfig, get_config,
+                               get_shape, list_archs)
+from repro.launch.inputs import make_batch
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+
+ARCHS = list_archs()
+
+
+def test_all_archs_registered():
+    assert set(ARCHS) == {
+        "qwen2-72b", "gemma3-27b", "yi-9b", "qwen1.5-110b",
+        "deepseek-v3-671b", "mixtral-8x22b", "whisper-small",
+        "zamba2-7b", "qwen2-vl-72b", "xlstm-350m"}
+
+
+@pytest.mark.parametrize("arch,layers,d,heads,kv,dff,vocab", [
+    ("qwen2-72b", 80, 8192, 64, 8, 29568, 152064),
+    ("gemma3-27b", 62, 5376, 32, 16, 21504, 262144),
+    ("yi-9b", 48, 4096, 32, 4, 11008, 64000),
+    ("qwen1.5-110b", 80, 8192, 64, 8, 49152, 152064),
+    ("deepseek-v3-671b", 61, 7168, 128, 128, 18432, 129280),
+    ("mixtral-8x22b", 56, 6144, 48, 8, 16384, 32768),
+    ("whisper-small", 12, 768, 12, 12, 3072, 51865),
+    ("zamba2-7b", 81, 3584, 32, 32, 14336, 32000),
+    ("qwen2-vl-72b", 80, 8192, 64, 8, 29568, 152064),
+    ("xlstm-350m", 24, 1024, 4, 4, 0, 50304),
+])
+def test_assigned_numbers(arch, layers, d, heads, kv, dff, vocab):
+    cfg = get_config(arch)
+    assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == (layers, d, heads, kv, dff, vocab)
+
+
+def test_param_counts_match_names():
+    # parameter count should be in the ballpark of the model's name
+    expect = {"qwen2-72b": 72, "yi-9b": 9, "qwen1.5-110b": 110,
+              "mixtral-8x22b": 141, "deepseek-v3-671b": 671,
+              "gemma3-27b": 27, "zamba2-7b": 7}
+    for arch, bn in expect.items():
+        n = get_config(arch).num_params / 1e9
+        assert 0.7 * bn <= n <= 1.35 * bn, (arch, n)
+
+
+def test_moe_flags():
+    ds = get_config("deepseek-v3-671b")
+    assert ds.moe.num_experts == 256 and ds.moe.top_k == 8
+    assert ds.moe.num_shared_experts == 1 and ds.mla is not None
+    mx = get_config("mixtral-8x22b")
+    assert mx.moe.num_experts == 8 and mx.moe.top_k == 2
+    assert mx.attn_type == "swa"
+
+
+def test_long_context_applicability():
+    subq = {a for a in ARCHS if get_config(a).sub_quadratic}
+    assert subq == {"gemma3-27b", "mixtral-8x22b", "zamba2-7b",
+                    "xlstm-350m"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_smoke_forward_and_train_step(arch):
+    """One forward + loss on a reduced config: shapes + no NaNs."""
+    cfg = get_config(arch).reduced()
+    mesh = make_host_mesh()
+    m = Model.create(cfg, mesh, ParallelConfig(remat="none"))
+    params = m.init(jax.random.key(0))
+    batch = make_batch(cfg, get_shape("train_4k").reduced())
+    loss, parts = m.loss(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss))
+    assert 2.0 < float(loss) < 12.0     # ~ln(vocab) at random init
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_smoke_prefill_decode(arch):
+    cfg = get_config(arch).reduced()
+    mesh = make_host_mesh()
+    m = Model.create(cfg, mesh, ParallelConfig(remat="none"))
+    params = m.init(jax.random.key(0))
+    shape = get_shape("prefill_32k").reduced()
+    out, cache = m.prefill(params, make_batch(cfg, shape))
+    tok = jnp.ones((shape.global_batch, 1), jnp.int32)
+    logits, cache = m.decode(params, cache, tok, jnp.int32(shape.seq_len))
+    assert logits.shape == (shape.global_batch, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())

@@ -1,0 +1,73 @@
+"""Cost-model validation against the paper's claims (Tables 5/6, Figs 5-7)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costmodel import (bandwidth_vs_concurrency,
+                                  interleave_bandwidth, loaded_latency,
+                                  offload_sweep, offload_throughput,
+                                  optimal_offload, transfer_time)
+from repro.core.tiers import TierTopology
+
+TOPO = TierTopology.tpu_v5e()
+KW = dict(model_bytes=130 << 30, hbm_capacity=72 << 30, link_bw=25 << 30,
+          kv_bytes_per_seq=200 << 20, flops_per_token=2 * 70e9,
+          peak_flops=900e12, hbm_bw=3 << 40, max_concurrency=150)
+
+
+def test_fig5_bandwidth_saturates():
+    t = TOPO.tier("host")
+    bws = [bandwidth_vs_concurrency(t, n) for n in (1, 2, 4, 8, 64)]
+    assert all(b2 >= b1 for b1, b2 in zip(bws, bws[1:]))   # monotone
+    assert bws[-1] == t.read_bw                            # saturates
+
+
+def test_fig6_loaded_latency_blows_up():
+    t = TOPO.tier("host")
+    lat = [loaded_latency(t, u * t.read_bw) for u in (0.1, 0.5, 0.9)]
+    assert lat[0] < lat[1] < lat[2]
+    assert lat[2] > 5 * t.latency
+
+
+def test_fig7_interleave_optimum():
+    tiers = [TOPO.tier("hbm"), TOPO.tier("host")]
+    # hbm-only < weighted both (aggregate bandwidth grows)
+    b_hbm = interleave_bandwidth(tiers, [1, 0])
+    ratio = tiers[0].read_bw / tiers[1].read_bw
+    w = [int(round(ratio)), 1]
+    assert interleave_bandwidth(tiers, w) > b_hbm
+
+
+def test_table5_peak_then_decline():
+    pts = offload_sweep(**KW)
+    tps = [p.tokens_per_s for p in pts]
+    peak = max(range(len(tps)), key=lambda i: tps[i])
+    assert 0 < peak < len(tps) - 1          # interior peak
+    assert tps[-1] < tps[peak]              # decline past peak
+
+
+def test_table6_bandwidth_throughput_proportionality():
+    # paper: 2.81x link bandwidth -> 2.7x tokens/s
+    fast = optimal_offload(**KW)
+    slow = optimal_offload(**{**KW, "link_bw": int((25 << 30) / 2.81)})
+    ratio = fast.tokens_per_s / slow.tokens_per_s
+    assert 2.3 <= ratio <= 2.81 * 1.1
+
+
+def test_overlap_never_hurts():
+    base = optimal_offload(**KW)
+    over = optimal_offload(**{**KW, "overlap": 1.0})
+    assert over.tokens_per_s >= base.tokens_per_s
+
+
+@given(ob=st.integers(0, 130 << 30))
+@settings(max_examples=50, deadline=None)
+def test_offload_throughput_nonnegative(ob):
+    p = offload_throughput(offload_bytes=ob, **KW)
+    assert p.tokens_per_s >= 0
+    assert p.bound in ("compute", "transfer", "capacity")
+
+
+def test_transfer_time_table6_scale():
+    t = transfer_time(160 << 20, TOPO, "hbm", "host")
+    assert 0.001 < t < 1.0     # ~20ms at 8GB/s per chip

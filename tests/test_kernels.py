@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, allclose."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_ref)
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_ref)
+from repro.kernels.quant import (dequantize, dequantize_ref, quantize,
+                                 quantize_ref)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,S,d,causal,window,blk", [
+    (1, 2, 2, 128, 64, True, 0, 64),     # MHA causal
+    (2, 4, 2, 128, 64, True, 0, 64),     # GQA
+    (2, 8, 1, 128, 32, True, 0, 32),     # MQA
+    (1, 2, 2, 128, 64, False, 0, 64),    # bidirectional
+    (1, 2, 2, 256, 64, True, 64, 64),    # sliding window
+    (1, 2, 2, 128, 128, True, 0, 128),   # MXU-aligned head dim
+])
+def test_flash_attention_sweep(dtype, B, Hq, Hkv, S, d, causal, window,
+                               blk):
+    rng = np.random.default_rng(42)
+    q = jnp.asarray(rng.normal(size=(B, Hq, S, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_blk=blk, kv_blk=blk)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,d,page,pps", [
+    (2, 4, 2, 64, 16, 4),
+    (3, 4, 4, 32, 8, 8),
+    (1, 8, 1, 128, 32, 2),
+])
+def test_paged_attention_sweep(dtype, B, Hq, Hkv, d, page, pps):
+    rng = np.random.default_rng(7)
+    n_pages = B * pps + 4
+    q = jnp.asarray(rng.normal(size=(B, Hq, d)), dtype)
+    kp = jnp.asarray(rng.normal(size=(n_pages, page, Hkv, d)), dtype)
+    vp = jnp.asarray(rng.normal(size=(n_pages, page, Hkv, d)), dtype)
+    bt = jnp.asarray(rng.permutation(n_pages)[:B * pps].reshape(B, pps),
+                     jnp.int32)
+    sl = jnp.asarray(rng.integers(1, pps * page + 1, B), jnp.int32)
+    out = paged_attention(q, kp, vp, bt, sl)
+    ref = paged_attention_ref(q, kp, vp, bt, sl)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("n,block", [(256 * 8, 256), (256 * 256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_kernel_sweep(n, block, dtype):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(n,)) * 10, dtype).astype(jnp.float32)
+    q, s = quantize(x, block)
+    qr, sr = quantize_ref(x, block)
+    # fp-association at round-to-half boundaries may flip an odd value by 1
+    # (bf16 inputs land on exact halves often, so more ties there)
+    diff = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    tie_budget = 1e-2 if dtype == jnp.bfloat16 else 1e-3
+    assert diff.max() <= 1 and (diff > 0).mean() < tie_budget
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # dequant kernel vs oracle on the SAME q (tie flips handled above)
+    xd = dequantize(q, s, block)
+    np.testing.assert_allclose(np.asarray(xd),
+                               np.asarray(dequantize_ref(q, s, block)),
+                               rtol=1e-6)
+    # quantization error bound: |x - deq| <= scale/2 per block (+fp slack)
+    err = np.abs(np.asarray(x) - np.asarray(xd)).reshape(-1, block)
+    bound = np.asarray(s)[:, None] * 0.51 + 1e-5
+    assert (err <= bound).all()
+
+
+def test_model_pallas_attention_path():
+    """ParallelConfig(attention_kernel='pallas') must match the XLA path."""
+    from repro.config.base import ParallelConfig, get_config, get_shape
+    from repro.launch.inputs import make_batch
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import Model
+    cfg = get_config("yi-9b").reduced(dtype="float32")
+    mesh = make_host_mesh()
+    batch = make_batch(cfg, get_shape("train_4k").reduced())
+    m1 = Model.create(cfg, mesh, ParallelConfig(remat="none"))
+    params = m1.init(jax.random.key(0))
+    l1, _ = m1.loss(params, batch)
+    m2 = Model.create(cfg, mesh, ParallelConfig(
+        remat="none", attention_kernel="pallas"))
+    l2, _ = m2.loss(params, batch)
+    assert abs(float(l1) - float(l2)) < 1e-4
+
+
+def test_flash_matches_model_attention():
+    """Kernel semantics == the model's XLA chunked-attention path."""
+    from repro.models.attention import chunked_attention
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, S, d = 2, 4, 2, 128, 64
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, d)), jnp.float32)
+    xla = chunked_attention(q, k, v, causal=True, q_chunk=32)
+    pallas = flash_attention(q.transpose(0, 2, 1, 3),
+                             k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3),
+                             causal=True, q_blk=32, kv_blk=32)
+    np.testing.assert_allclose(np.asarray(pallas.transpose(0, 2, 1, 3)),
+                               np.asarray(xla), rtol=2e-5, atol=2e-5)

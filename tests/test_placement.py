@@ -1,0 +1,76 @@
+"""Property tests (hypothesis) for the placement/interleave engine."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.base import get_config
+from repro.core.costmodel import (interleave_bandwidth,
+                                  optimal_interleave_weights)
+from repro.core.placement import (interleave_counts, interleave_pages,
+                                  plan_training_placement)
+from repro.core.tiers import TierTopology
+
+
+@given(n_pages=st.integers(1, 4096),
+       weights=st.lists(st.integers(0, 8), min_size=1, max_size=4)
+       .filter(lambda w: sum(w) > 0))
+@settings(max_examples=200, deadline=None)
+def test_interleave_total_and_proportions(n_pages, weights):
+    assign = interleave_pages(n_pages, weights)
+    assert len(assign) == n_pages
+    assert assign.min() >= 0 and assign.max() < len(weights)
+    counts = interleave_counts(n_pages, weights)
+    assert sum(counts) == n_pages
+    total_w = sum(weights)
+    for i, w in enumerate(weights):
+        # weighted round-robin: each tier within one round of its share
+        expect = n_pages * w / total_w
+        assert abs(counts[i] - expect) <= total_w
+        if w == 0:
+            assert counts[i] == 0
+
+
+@given(n_pages=st.integers(1, 512),
+       weights=st.lists(st.integers(0, 8), min_size=2, max_size=3)
+       .filter(lambda w: sum(w) > 0))
+@settings(max_examples=100, deadline=None)
+def test_interleave_deterministic(n_pages, weights):
+    a = interleave_pages(n_pages, weights)
+    b = interleave_pages(n_pages, weights)
+    assert (a == b).all()
+
+
+def test_paper_example_2_2_1():
+    # paper §3.4.2: weights 2,2,1 over 100 pages -> 40/40/20
+    assert interleave_counts(100, [2, 2, 1]) == [40, 40, 20]
+
+
+def test_optimal_weights_proportional_to_bandwidth():
+    topo = TierTopology.tpu_v5e()
+    tiers = [topo.tier("hbm"), topo.tier("host")]
+    ws = optimal_interleave_weights(tiers)
+    assert ws[0] > ws[1] >= 0
+    # optimum beats naive 1:1 for asymmetric tiers
+    assert interleave_bandwidth(tiers, ws) >= \
+        interleave_bandwidth(tiers, [1, 1])
+
+
+@pytest.mark.parametrize("arch,expect_offload", [
+    ("yi-9b", False), ("qwen2-72b", False), ("deepseek-v3-671b", True),
+])
+def test_training_placement(arch, expect_offload):
+    plan = plan_training_placement(get_config(arch), 256)
+    offloaded = any(v != "device" for v in plan.kinds.values())
+    assert offloaded == expect_offload
+    assert plan.fits
+    assert plan.hbm_used <= plan.hbm_capacity
+
+
+def test_placement_policies():
+    cfg = get_config("yi-9b")
+    never = plan_training_placement(cfg, 256, policy="never")
+    always = plan_training_placement(cfg, 256, policy="always")
+    assert all(v == "device" for v in never.kinds.values())
+    assert always.kinds["master"] == "pinned_host"
+    assert always.kinds["params"] == "device"   # compute copy stays in HBM

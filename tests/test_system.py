@@ -1,0 +1,126 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Covers: training convergence + checkpoint resume, microbatch-equivalence,
+the serving engine (tiered weights included), the synthetic data pipeline,
+fault supervision, and elastic replanning — the production loop at smoke
+scale.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import (ParallelConfig, RunConfig, ShapeConfig,
+                               get_config, get_shape)
+from repro.data.synthetic import PrefetchLoader, synthetic_batch
+from repro.launch.train import train
+from repro.runtime.elastic import plan_mesh, replan
+from repro.runtime.fault import StepSupervisor, StepTimeout, StragglerStats
+
+
+def test_train_loss_decreases_and_resumes(tmp_path):
+    cfg = get_config("yi-9b").reduced()
+    shape = ShapeConfig("t", 64, 4, "train")
+    run = RunConfig(steps=24, learning_rate=1e-3, warmup_steps=2,
+                    checkpoint_dir=str(tmp_path), checkpoint_every=10,
+                    log_every=100)
+    out = train(cfg, shape, run, ParallelConfig(remat="full"),
+                log=lambda *a: None)
+    h = out["history"]
+    # fresh batch each step -> compare trailing vs leading means
+    assert np.mean(h[-5:]) < np.mean(h[:5])
+    # resume: second call starts from the step-20 checkpoint
+    run2 = RunConfig(steps=26, learning_rate=1e-3, warmup_steps=2,
+                     checkpoint_dir=str(tmp_path), checkpoint_every=50,
+                     log_every=100)
+    out2 = train(cfg, shape, run2, ParallelConfig(remat="full"),
+                 log=lambda *a: None)
+    assert len(out2["history"]) <= 26 - 20   # resumed, not from scratch
+
+
+def test_train_microbatch_equivalence(tmp_path):
+    """lr=0: microbatched loss must equal full-batch loss exactly."""
+    cfg = get_config("yi-9b").reduced()
+    shape = ShapeConfig("t", 64, 4, "train")
+
+    def run_with(n, sub):
+        run = RunConfig(steps=3, learning_rate=0.0, warmup_steps=1,
+                        checkpoint_dir=str(tmp_path / sub),
+                        checkpoint_every=0, log_every=100)
+        return train(cfg, shape, run,
+                     ParallelConfig(remat="none", microbatches=n),
+                     log=lambda *a: None)["history"]
+    np.testing.assert_allclose(run_with(1, "a"), run_with(2, "b"),
+                               rtol=2e-2)
+
+
+def test_serve_engine_offload_equivalence():
+    """Paper-faithful weight offload must not change generated tokens."""
+    from repro.launch.serve import Request, ServeEngine
+    cfg = get_config("yi-9b").reduced()
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                    4) for i in range(2)]
+    hbm = ServeEngine(cfg).serve(list(reqs))
+    off = ServeEngine(cfg, offload_weights=True).serve(list(reqs))
+    assert [r.tokens for r in hbm] == [r.tokens for r in off]
+
+
+def test_synthetic_data_deterministic():
+    cfg = get_config("yi-9b").reduced()
+    shape = ShapeConfig("t", 32, 2, "train")
+    a = synthetic_batch(cfg, shape, step=3)
+    b = synthetic_batch(cfg, shape, step=3)
+    c = synthetic_batch(cfg, shape, step=4)
+    assert bool((a["tokens"] == b["tokens"]).all())
+    assert not bool((a["tokens"] == c["tokens"]).all())
+    assert a["labels"].shape == a["tokens"].shape
+
+
+def test_prefetch_loader():
+    cfg = get_config("yi-9b").reduced()
+    shape = ShapeConfig("t", 32, 2, "train")
+    loader = PrefetchLoader(cfg, shape, start_step=5)
+    step, batch = next(iter(loader))
+    assert step == 5 and batch["tokens"].shape == (2, 32)
+    loader.close()
+
+
+def test_step_supervisor_timeout():
+    import time
+    sup = StepSupervisor(timeout_factor=1.0, min_timeout=0.2)
+    with pytest.raises(StepTimeout):
+        sup.run(lambda: time.sleep(5))
+    out, dt = sup.run(lambda: 42)
+    assert out == 42
+
+
+def test_straggler_stats():
+    s = StragglerStats()
+    for _ in range(20):
+        s.record(0.1)
+    assert not s.inflated
+    for _ in range(3):
+        s.record(1.0)
+    assert s.inflated
+
+
+def test_elastic_replan():
+    assert plan_mesh(256) == (16, 16)
+    assert plan_mesh(192) == (12, 16)
+    assert plan_mesh(7) == (7, 1)
+    cfg = get_config("yi-9b")
+    d = replan(cfg, get_shape("train_4k"), 192)
+    assert d.mesh_shape[0] * d.mesh_shape[1] <= 192
+    assert d.global_batch % d.mesh_shape[0] == 0
+
+
+def test_heimdall_rows_wellformed():
+    from repro.heimdall.micro import micro_latency
+    rows = micro_latency(n_elems=1 << 10, chase_len=64)
+    assert len(rows) == 2
+    for r in rows:
+        assert r.us_per_call > 0
+        name, us, derived = r.csv().split(",")
+        assert name.startswith("micro_latency/")
