@@ -17,12 +17,16 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run benchmarks whose name contains this")
     ap.add_argument("--skip-apps", action="store_true")
+    ap.add_argument("--skip-interference", action="store_true")
     args = ap.parse_args()
 
     from repro.heimdall.micro import ALL_MICRO
     from repro.heimdall.apps import ALL_APPS
+    from repro.heimdall.interference import ALL_INTERFERENCE
 
-    benches = list(ALL_MICRO) + ([] if args.skip_apps else list(ALL_APPS))
+    benches = (list(ALL_MICRO)
+               + ([] if args.skip_interference else list(ALL_INTERFERENCE))
+               + ([] if args.skip_apps else list(ALL_APPS)))
     print("name,us_per_call,derived")
     failures = 0
     for bench in benches:

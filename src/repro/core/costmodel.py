@@ -45,10 +45,13 @@ def loaded_latency(tier: MemoryTier, achieved_bw: float) -> float:
     """Fig 6: access latency as a function of utilization (M/M/1-shaped).
 
     Near saturation latency blows up — the paper's CXL expanders hit
-    1700-3300 ns at peak vs ~300 ns unloaded.
+    1700-3300 ns at peak vs ~300 ns unloaded. The multi-flow generalization
+    (aggregate utilization from several sharers over a routed link) is
+    ``repro.fabric.contention.loaded_latency_multi``; this single-flow form
+    is the one-sharer special case.
     """
-    u = min(achieved_bw / tier.read_bw, 0.999)
-    return tier.latency / (1.0 - u)
+    from repro.fabric.contention import loaded_latency_multi
+    return loaded_latency_multi(tier.read_bw, tier.latency, [achieved_bw])
 
 
 def interleave_bandwidth(tiers: Sequence[MemoryTier],
@@ -165,8 +168,34 @@ def optimal_offload(**kw) -> OffloadPoint:
     return max(offload_sweep(**kw), key=lambda p: p.tokens_per_s)
 
 
-def transfer_time(nbytes: int, topo: TierTopology, src: str,
-                  dst: str) -> float:
-    """Table 6: bulk transfer duration over a tier link."""
-    bw = topo.link_bw(src, dst)
-    return nbytes / bw + topo.tier(src).latency
+def transfer_time(nbytes: int, topo, src: str, dst: str) -> float:
+    """Table 6: bulk transfer duration between two tiers.
+
+    ``topo`` may be a ``TierTopology`` (point-to-point link, the original
+    model) or anything with fabric routing — a ``repro.fabric.System`` or
+    ``FabricTopology`` — in which case the transfer is routed through the
+    fabric graph: bottleneck bandwidth along the path plus the summed hop
+    latency. Uncontended by construction; for co-running traffic see
+    ``contended_transfer_time`` or ``repro.fabric.sim``.
+    """
+    if hasattr(topo, "route_bandwidth"):           # fabric-routed path
+        return (nbytes / topo.route_bandwidth(src, dst)
+                + topo.route_latency(src, dst))
+    return nbytes / topo.link_bw(src, dst) + topo.link_latency(src, dst)
+
+
+def contended_transfer_time(nbytes: int, system, src: str, dst: str,
+                            background: Sequence = ()) -> float:
+    """Transfer duration when background flows share links with it.
+
+    ``system`` is a ``repro.fabric.System``; ``background`` is a sequence of
+    ``fabric.Flow`` (node- or tier-named endpoints are both accepted).
+    Steady-state estimate: the max-min fair rate the transfer gets alongside
+    the background, plus routed latency. For arrival/completion dynamics run
+    ``fabric.sim.simulate`` directly.
+    """
+    from repro.fabric.contention import effective_bandwidth
+    s, d = system.tier_node(src), system.tier_node(dst)
+    bw = effective_bandwidth(system.fabric, s, d,
+                             system.resolve_flows(background))
+    return nbytes / bw + system.fabric.route_latency(s, d)

@@ -27,8 +27,16 @@ from jax.sharding import NamedSharding
 from repro.core.placement import PlacementPlan
 
 
+def _supported_kind(kind: str) -> Optional[str]:
+    """Single-memory backends collapse all tiers — same policy (and same
+    cached probe) as the harness's tier placement."""
+    from repro.heimdall.harness import supported_memory_kind
+    return supported_memory_kind(kind)
+
+
 def with_memory_kind(sharding: NamedSharding, kind: str) -> NamedSharding:
-    return NamedSharding(sharding.mesh, sharding.spec, memory_kind=kind)
+    return NamedSharding(sharding.mesh, sharding.spec,
+                         memory_kind=_supported_kind(kind))
 
 
 def put_tree(tree, kind: str):
@@ -39,7 +47,7 @@ def put_tree(tree, kind: str):
             return jax.device_put(x, with_memory_kind(s, kind))
         return jax.device_put(
             x, jax.sharding.SingleDeviceSharding(
-                jax.devices()[0], memory_kind=kind))
+                jax.devices()[0], memory_kind=_supported_kind(kind)))
     return jax.tree.map(put, tree)
 
 

@@ -135,13 +135,23 @@ def plan_training_placement(cfg: ModelConfig, n_chips: int,
 
 
 def plan_kv_placement(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
-                      topo: Optional[TierTopology] = None) -> dict:
+                      topo: Optional[TierTopology] = None,
+                      system=None, background: Sequence = ()) -> dict:
     """KV-cache tier split for serving (paper Fig 24 / §6.1.4).
 
-    Returns {'weights': kind, 'kv': kind, 'kv_interleave': [w_hbm, w_host]}.
-    Full-HBM when it fits; otherwise weighted interleave of KV pages across
-    HBM and host with cost-model-optimal weights.
+    Returns {'weights': kind, 'kv': kind, 'kv_interleave': [w_fast, w_slow]}.
+    Full fast-tier when it fits; otherwise weighted interleave of KV pages
+    across the fast and spill tiers with cost-model-optimal weights.
+
+    Contention-aware mode: pass a ``repro.fabric.System`` (and optionally
+    ``background`` fabric flows, tier- or node-named). The interleave
+    weights are then computed from *contended* effective bandwidths — the
+    max-min fair rate each tier path achieves alongside the background
+    traffic — so a noisy neighbor on a shared CXL/PCIe link shifts pages
+    toward the unaffected tier.
     """
+    if system is not None:
+        return _plan_kv_fabric(cfg, shape, n_chips, system, background)
     topo = topo or TierTopology.tpu_v5e()
     hbm = topo.tier("hbm").capacity
     w_bytes = int(cfg.num_params) * 2 // n_chips
@@ -153,6 +163,53 @@ def plan_kv_placement(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
     ws = optimal_interleave_weights(tiers)
     return {"weights": "device", "kv": "interleaved",
             "kv_interleave": ws}
+
+
+def contended_tier_bandwidths(system, background: Sequence = ()) -> dict:
+    """Effective read bandwidth of each mapped tier under background flows.
+
+    Probes each compute->tier route with max-min fair sharing against the
+    background; with no background this equals the routed bottleneck
+    bandwidth ``TierTopology.from_fabric`` reports.
+    """
+    from repro.fabric.contention import effective_bandwidth
+    bg = system.resolve_flows(background)
+    return {tier: effective_bandwidth(system.fabric, node, system.compute,
+                                      bg)
+            for tier, node in system.tier_map.items()}
+
+
+def _plan_kv_fabric(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
+                    system, background: Sequence) -> dict:
+    import dataclasses as _dc
+
+    fast_node = system.tier_map[system.kv_tiers[0]] if system.kv_tiers \
+        else next(iter(system.tier_map.values()))
+    fast_kind = system.fabric.node(fast_node).memory_kind
+    if system.kv_tiers is None:           # unified memory (MI300A): no spill
+        return {"weights": fast_kind, "kv": fast_kind or "unified",
+                "kv_interleave": [1, 0], "kv_tiers": None,
+                "effective_bw": contended_tier_bandwidths(system,
+                                                          background)}
+    fast, slow = system.kv_tiers
+    topo = TierTopology.from_fabric(system)
+    w_bytes = int(cfg.num_params) * 2 // n_chips
+    kv_bytes = _kv_bytes_per_chip(cfg, shape, n_chips)
+    eff = contended_tier_bandwidths(system, background)
+    if w_bytes + kv_bytes <= topo.tier(fast).capacity * 0.9:
+        return {"weights": fast_kind, "kv": fast_kind or fast,
+                "kv_interleave": [1, 0], "kv_tiers": (fast, slow),
+                "effective_bw": eff}
+    adjusted = [_dc.replace(topo.tier(t), read_bw=eff[t], write_bw=eff[t])
+                for t in (fast, slow)]
+    ws = optimal_interleave_weights(adjusted)
+    # Contention can drive the spill tier's share to zero (its effective
+    # bandwidth is too small to be worth a page stripe) — that is a
+    # fast-tier-only plan, not an interleave.
+    kv = "interleaved" if ws[1] > 0 else (fast_kind or fast)
+    return {"weights": fast_kind, "kv": kv,
+            "kv_interleave": ws, "kv_tiers": (fast, slow),
+            "effective_bw": eff}
 
 
 def _kv_bytes_per_chip(cfg: ModelConfig, shape: ShapeConfig,

@@ -46,12 +46,18 @@ class TierTopology:
     def tier(self, name: str) -> MemoryTier:
         return self.tiers[name]
 
-    def link_bw(self, src: str, dst: str) -> float:
+    def _link(self, src: str, dst: str) -> Link:
         if (src, dst) in self.links:
-            return self.links[(src, dst)].bandwidth
+            return self.links[(src, dst)]
         if (dst, src) in self.links:
-            return self.links[(dst, src)].bandwidth
+            return self.links[(dst, src)]
         raise KeyError((src, dst))
+
+    def link_bw(self, src: str, dst: str) -> float:
+        return self._link(src, dst).bandwidth
+
+    def link_latency(self, src: str, dst: str) -> float:
+        return self._link(src, dst).latency
 
     @classmethod
     def tpu_v5e(cls, chips_per_host: int = hw.CHIPS_PER_HOST
@@ -87,9 +93,50 @@ class TierTopology:
     @classmethod
     def from_calibration(cls, measurements: dict) -> "TierTopology":
         """Build a topology from HEIMDALL measurement output
-        ({tier: {capacity, read_bw, write_bw, latency, memory_kind}})."""
+        ({tier: {capacity, read_bw, write_bw, latency, memory_kind}}).
+
+        Calibration measures tiers, not links, so links are derived: a
+        transfer between two tiers is limited by the slower endpoint
+        (min of read bandwidths) and pays the farther endpoint's latency —
+        the conservative bound until a fabric preset supplies real routes
+        (see ``from_fabric``)."""
         tiers = {k: MemoryTier(k, **v) for k, v in measurements.items()}
-        return cls(tiers=tiers, links={})
+        links = {}
+        names = sorted(tiers)
+        for i, a in enumerate(names):
+            for b in names[i + 1:]:
+                links[(a, b)] = Link(a, b,
+                                     min(tiers[a].read_bw, tiers[b].read_bw),
+                                     max(tiers[a].latency, tiers[b].latency))
+        return cls(tiers=tiers, links=links)
+
+    @classmethod
+    def from_fabric(cls, system) -> "TierTopology":
+        """Derive a tier topology from a ``repro.fabric.System`` preset.
+
+        Each mapped memory node becomes a tier whose bandwidth/latency are
+        the *routed* path from the system's reference compute node; each
+        tier pair gets a link with the routed bottleneck bandwidth — so the
+        point-to-point consumers (cost model, placement) see fabric-accurate
+        uncontended numbers on any of the paper's machines.
+        """
+        tiers, links = {}, {}
+        for tier_name, node_name in system.tier_map.items():
+            node = system.fabric.node(node_name)
+            bw = system.fabric.route_bandwidth(system.compute, node_name)
+            lat = system.fabric.route_latency(system.compute, node_name)
+            tiers[tier_name] = MemoryTier(tier_name, node.capacity, bw, bw,
+                                          lat, node.memory_kind)
+        names = sorted(system.tier_map)
+        for i, a in enumerate(names):
+            for b in names[i + 1:]:
+                na, nb = system.tier_map[a], system.tier_map[b]
+                if na == nb:
+                    continue
+                links[(a, b)] = Link(a, b,
+                                     system.fabric.route_bandwidth(na, nb),
+                                     system.fabric.route_latency(na, nb))
+        return cls(tiers=tiers, links=links)
 
 
 # Addressable tiers under the JAX memories API (what placement can use).

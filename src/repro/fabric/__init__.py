@@ -1,0 +1,38 @@
+"""Contention-aware interconnect fabric simulator.
+
+Layers (bottom-up):
+  topology   — device/memory/switch graph, typed links, latency routing
+  systems    — presets for the paper's machines (Table 1)
+  contention — max-min fair sharing + multi-flow loaded latency
+  sim        — discrete-event fluid-flow transfer engine
+  scenarios  — named interference experiments (noisy neighbor, ...)
+
+Consumers: core.costmodel routes transfer_time through here, core.placement
+picks interleave weights from contended bandwidths, serving.pager schedules
+prefetches via sim, heimdall.interference benchmarks the scenarios.
+"""
+
+from repro.fabric.contention import (Flow, effective_bandwidth,
+                                     loaded_latency_multi, max_min_rates,
+                                     route_loaded_latency)
+from repro.fabric.scenarios import (ALL_SCENARIOS, ScenarioResult,
+                                    bidirectional_fight,
+                                    noisy_neighbor_pool,
+                                    offload_vs_prefetch, run_scenario)
+from repro.fabric.sim import FlowResult, makespan, simulate, \
+    single_flow_time
+from repro.fabric.systems import SYSTEMS, System, cxl_pool, \
+    dual_socket_cxl, get_system, gh200, mi300a, tpu_v5e
+from repro.fabric.topology import (FabricLink, FabricNode, FabricTopology,
+                                   LinkType, NodeKind)
+
+__all__ = [
+    "FabricLink", "FabricNode", "FabricTopology", "LinkType", "NodeKind",
+    "SYSTEMS", "System", "get_system", "dual_socket_cxl", "cxl_pool",
+    "gh200", "mi300a", "tpu_v5e",
+    "Flow", "max_min_rates", "effective_bandwidth", "loaded_latency_multi",
+    "route_loaded_latency",
+    "FlowResult", "simulate", "makespan", "single_flow_time",
+    "ScenarioResult", "run_scenario", "ALL_SCENARIOS",
+    "noisy_neighbor_pool", "offload_vs_prefetch", "bidirectional_fight",
+]

@@ -1,0 +1,101 @@
+"""Discrete-event transfer simulator over the fabric graph.
+
+Fluid-flow model: at any instant every active flow moves bytes at its
+max-min fair rate (repro.fabric.contention); events are flow arrivals and
+completions, and rates are recomputed at each event — the standard
+processor-sharing fluid approximation a full-system simulator like Cohet
+calibrates against hardware. A single uncontended flow therefore finishes in
+exactly ``nbytes / route_bandwidth + route_latency`` — the closed form
+``costmodel.transfer_time`` — while concurrent flows stretch each other out
+through shared links.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.fabric.contention import Flow, max_min_rates
+from repro.fabric.topology import FabricTopology
+
+_EPS_BYTES = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowResult:
+    flow: Flow
+    finish: float                # seconds (absolute, includes route latency)
+
+    @property
+    def duration(self) -> float:
+        return self.finish - self.flow.start
+
+    @property
+    def achieved_bandwidth(self) -> float:
+        """Mean bytes/s over the flow's lifetime (latency included)."""
+        return self.flow.nbytes / max(self.duration, 1e-18)
+
+
+def simulate(topo: FabricTopology,
+             flows: Sequence[Flow]) -> list[FlowResult]:
+    """Run all flows to completion; returns results in input order.
+
+    Every flow needs ``nbytes > 0`` (open-ended streams belong to the
+    steady-state functions in contention.py, not the event engine).
+    """
+    for f in flows:
+        if f.nbytes <= 0:
+            raise ValueError(f"flow {f.id!r} needs nbytes > 0 to simulate")
+    routes = {f.id: topo.route(f.src, f.dst) for f in flows}
+    lat = {f.id: sum(l.latency for l in routes[f.id]) for f in flows}
+
+    pending = sorted(flows, key=lambda f: (f.start, f.id))
+    active: dict[str, Flow] = {}
+    remaining: dict[str, float] = {}
+    finish: dict[str, float] = {}
+    t = pending[0].start if pending else 0.0
+
+    while pending or active:
+        while pending and pending[0].start <= t + 1e-18:
+            f = pending.pop(0)
+            if not routes[f.id]:          # src == dst: no link to cross
+                finish[f.id] = f.start
+                continue
+            active[f.id] = f
+            remaining[f.id] = float(f.nbytes)
+        if not active:
+            if not pending:                 # only zero-hop flows remained
+                break
+            t = pending[0].start            # idle gap before next arrival
+            continue
+        rates = max_min_rates(topo, list(active.values()),
+                              {fid: routes[fid] for fid in active})
+        next_arrival = pending[0].start if pending else math.inf
+        t_done = min(t + remaining[fid] / rates[fid] if rates[fid] > 0
+                     else math.inf for fid in active)
+        t_next = min(next_arrival, t_done)
+        if math.isinf(t_next):
+            raise RuntimeError("simulation stalled: zero-rate flows "
+                               f"{sorted(active)}")
+        dt = t_next - t
+        for fid in list(active):
+            if rates[fid] > 0:
+                remaining[fid] -= rates[fid] * dt
+            if remaining[fid] <= _EPS_BYTES:
+                finish[fid] = t_next + lat[fid]
+                del active[fid], remaining[fid]
+        t = t_next
+
+    return [FlowResult(f, finish[f.id]) for f in flows]
+
+
+def makespan(results: Sequence[FlowResult]) -> float:
+    return max(r.finish for r in results) if results else 0.0
+
+
+def single_flow_time(topo: FabricTopology, src: str, dst: str,
+                     nbytes: int) -> float:
+    """Closed form an uncontended sim run must reproduce (sanity anchor)."""
+    return nbytes / topo.route_bandwidth(src, dst) \
+        + topo.route_latency(src, dst)

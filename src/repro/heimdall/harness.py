@@ -9,6 +9,7 @@ and median-of-runs reporting.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import statistics
 import time
 from typing import Callable, Optional
@@ -44,19 +45,54 @@ def time_fn(fn: Callable, *args, warmup: int = 3, iters: int = 10,
     return statistics.median(times)
 
 
+@functools.cache
+def backend_memory_kinds():
+    """Memory kinds the default device addresses, or None if the backend
+    has no memories API. Cached — called per array placement."""
+    try:
+        return frozenset(m.kind
+                         for m in jax.devices()[0].addressable_memories())
+    except Exception:       # noqa: BLE001 — backend without memories API
+        return None
+
+
+def supported_memory_kind(kind):
+    """The requested memory kind, or None (= default memory) when the
+    backend cannot address it — the single collapse policy shared by
+    tier_sharding and core.offload."""
+    kinds = backend_memory_kinds()
+    if kinds is None or kind in kinds:
+        return kind
+    return None
+
+
 def tier_sharding(memory_kind: str = "device",
                   mesh=None) -> NamedSharding:
+    """Sharding pinned to a memory tier.
+
+    On single-memory backends (e.g. this CPU container, which only exposes
+    ``unpinned_host``) all tiers collapse into the default memory — relative
+    tier numbers compress, as micro.py's header notes — instead of erroring.
+    """
     if mesh is None:
-        mesh = jax.make_mesh((1,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-    return NamedSharding(mesh, P(), memory_kind=memory_kind)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1,), ("x",))
+    return NamedSharding(mesh, P(),
+                         memory_kind=supported_memory_kind(memory_kind))
+
+
+_TIER_KINDS = {"hbm": "device", "device": "device",
+               "host": "pinned_host", "pinned_host": "pinned_host"}
 
 
 def place(x: jax.Array, tier: str) -> jax.Array:
     """tier: 'hbm' -> device memory, 'host' -> pinned_host."""
-    kind = {"hbm": "device", "device": "device",
-            "host": "pinned_host", "pinned_host": "pinned_host"}[tier]
-    return jax.device_put(x, tier_sharding(kind))
+    if tier not in _TIER_KINDS:
+        raise ValueError(
+            f"unknown tier {tier!r}: JAX can only place arrays in "
+            f"{sorted(set(_TIER_KINDS))}; simulated-only tiers (e.g. "
+            f"'pool') live in repro.fabric system presets, not here")
+    return jax.device_put(x, tier_sharding(_TIER_KINDS[tier]))
 
 
 TIERS = ("hbm", "host")

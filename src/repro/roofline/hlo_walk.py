@@ -221,8 +221,12 @@ class HloCost:
             if mi:
                 name = mi.group(2)
                 rhs = mi.group(3)
-                # type is the prefix before the op name
-                syms[name] = rhs
+                # type is the prefix before the op name — storing the full
+                # rhs would make operand lookups count the producer's own
+                # operand shapes too (e.g. a reduce over a dot would charge
+                # the dot's inputs again)
+                mo = re.search(r"\s[a-z][\w\-]*\(", rhs)
+                syms[name] = rhs[:mo.start()] if mo else rhs
         return syms
 
     def _dot_flops(self, rhs: str, syms: dict[str, str]) -> float:

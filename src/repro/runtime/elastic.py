@@ -17,7 +17,7 @@ from typing import Optional
 import jax
 
 from repro.config.base import ModelConfig, ShapeConfig
-from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, _auto
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, _make_mesh
 
 
 @dataclasses.dataclass
@@ -57,5 +57,4 @@ def replan(cfg: ModelConfig, shape: ShapeConfig, n_devices: int,
 
 def make_elastic_mesh(decision: ElasticDecision):
     data, model = decision.mesh_shape
-    return jax.make_mesh((data, model), (DATA_AXIS, MODEL_AXIS),
-                         axis_types=_auto(2))
+    return _make_mesh((data, model), (DATA_AXIS, MODEL_AXIS))

@@ -138,3 +138,80 @@ class PagedKVCache:
     @property
     def occupancy(self) -> float:
         return 1.0 - len(self.free) / self.cfg.n_pages
+
+    # -- prefetch scheduling (fabric sim) -------------------------------------
+    @property
+    def page_bytes(self) -> int:
+        """Bytes moved per page fetch (K and V planes)."""
+        c = self.cfg
+        return (2 * c.page_size * c.kv_heads * c.head_dim
+                * jnp.dtype(c.dtype).itemsize)
+
+    def host_pages(self, seq_ids: list[int]) -> list[int]:
+        """Host-tier-resident pages of these sequences, in attention order
+        (the order the decode step will touch them)."""
+        pages = []
+        for s in seq_ids:
+            pages.extend(p for p in self.tables[s]
+                         if self.tier_of_page[p] == 1 and p not in pages)
+        return pages
+
+    def plan_prefetch(self, seq_ids: list[int], system=None,
+                      background: tuple = ()) -> "PrefetchPlan":
+        """Schedule host->HBM page prefetches through the fabric simulator.
+
+        Pages are fetched one at a time over the host link (one DMA queue),
+        each flow chained behind the previous, co-scheduled against any
+        ``background`` fabric flows (e.g. a weight-offload stream on the
+        same PCIe link). Returns per-page ETAs so the serving loop knows
+        which pages will be resident by the time the step needs them.
+        """
+        return plan_prefetch(self.host_pages(seq_ids), self.page_bytes,
+                             system=system, background=background)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchPlan:
+    """Fabric-simulated prefetch schedule for a set of host-tier pages."""
+    order: tuple                 # page ids in fetch order
+    eta: dict                    # page id -> estimated arrival time (s)
+    total_time: float            # when the last page lands (s)
+    effective_bw: float          # contended link bandwidth used (bytes/s)
+
+    def ready_by(self, deadline: float) -> list[int]:
+        """Pages resident if the decode step fires at `deadline`."""
+        return [p for p in self.order if self.eta[p] <= deadline]
+
+
+def plan_prefetch(pages: list, page_bytes: int, system=None,
+                  background: tuple = ()) -> PrefetchPlan:
+    """Build a PrefetchPlan by simulating chained page flows on the fabric.
+
+    ``system`` defaults to the TPU v5e preset (host_dram -> chip0 over
+    PCIe). ``background`` flows (repro.fabric.Flow, tier- or node-named
+    endpoints) contend with the prefetch stream for shared links.
+    """
+    from repro.fabric.contention import Flow, effective_bandwidth
+    from repro.fabric.sim import simulate
+    from repro.fabric.systems import get_system
+
+    system = system or get_system("tpu_v5e")
+    src = system.tier_node("host")
+    dst = system.compute
+    bg = system.resolve_flows(background)
+    eff = effective_bandwidth(system.fabric, src, dst, bg)
+    if not pages:
+        return PrefetchPlan((), {}, 0.0, eff)
+    # One in-flight fetch at a time (a single DMA queue): stagger each page
+    # flow behind the previous one's contended estimate, then let the sim
+    # resolve the actual ETAs against the background traffic.
+    lat = system.fabric.route_latency(src, dst)
+    est = page_bytes / eff + lat
+    flows = [Flow(f"page{p}", src, dst, page_bytes, start=i * est)
+             for i, p in enumerate(pages)]
+    bg_sized = [f if f.nbytes > 0
+                else dataclasses.replace(f, nbytes=page_bytes * len(pages))
+                for f in bg]
+    results = simulate(system.fabric, flows + bg_sized)
+    eta = {p: r.finish for p, r in zip(pages, results)}
+    return PrefetchPlan(tuple(pages), eta, max(eta.values()), eff)

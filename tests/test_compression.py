@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.compression import (decompress_tree, dequantize_int8,
                                     ef_compress, ef_compress_tree, ef_init,
@@ -63,12 +63,13 @@ def test_compressed_pod_mean_single_axis():
     from functools import partial
     from repro.core.compression import compressed_pod_mean
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("pod",))
     x = jnp.asarray(np.random.default_rng(0).normal(size=(512,)),
                     jnp.float32)
-    fn = jax.shard_map(partial(compressed_pod_mean, pod_axis="pod"),
-                       mesh=mesh, in_specs=P(), out_specs=P(),
-                       check_vma=False)
+    from repro.launch.mesh import shard_map
+    fn = shard_map(partial(compressed_pod_mean, pod_axis="pod"),
+                   mesh=mesh, in_specs=P(), out_specs=P(),
+                   check_vma=False)
     # int8 error bound: absmax/127/2 ~ 1.4e-2 for N(0,1) extremes
     np.testing.assert_allclose(np.asarray(fn(x)), np.asarray(x), atol=3e-2)

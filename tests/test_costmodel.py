@@ -1,7 +1,7 @@
 """Cost-model validation against the paper's claims (Tables 5/6, Figs 5-7)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.costmodel import (bandwidth_vs_concurrency,
                                   interleave_bandwidth, loaded_latency,

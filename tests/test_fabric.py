@@ -1,0 +1,244 @@
+"""Fabric simulator: routing, contention, sim-vs-closed-form, placement.
+
+Covers the ISSUE acceptance criteria: routing correctness on every system
+preset, contention monotonicity, single-flow sim agreement with the
+closed-form cost model (<5%), and interleave weights responding to
+interference. No JAX arrays involved — pure graph/fluid model.
+"""
+
+import math
+
+import pytest
+
+from repro.config.base import ShapeConfig, get_config
+from repro.core.costmodel import contended_transfer_time, transfer_time
+from repro.core.placement import plan_kv_placement
+from repro.core.tiers import TierTopology
+from repro.fabric import (Flow, SYSTEMS, effective_bandwidth, get_system,
+                          loaded_latency_multi, makespan, max_min_rates,
+                          simulate)
+from repro.fabric.scenarios import (bidirectional_fight,
+                                    noisy_neighbor_pool,
+                                    offload_vs_prefetch)
+
+MiB = 1 << 20
+
+
+# -- routing ----------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SYSTEMS))
+def test_routing_every_tier_reachable(name):
+    s = get_system(name)
+    assert len(s.tier_map) >= 1
+    for tier, node in s.tier_map.items():
+        route = s.fabric.route(s.compute, node)
+        assert route, f"{name}: no route {s.compute}->{tier}"
+        assert route[0].src == s.compute and route[-1].dst == node
+        # consecutive links chain
+        for a, b in zip(route, route[1:]):
+            assert a.dst == b.src
+        assert s.fabric.route_bandwidth(s.compute, node) > 0
+        assert s.fabric.route_latency(s.compute, node) > 0
+
+
+def test_routing_prefers_low_latency():
+    s = get_system("dual_socket_cxl")
+    # remote DRAM must be reached through the socket link, not teleported
+    route = s.route("local_dram", "remote_dram")
+    assert [l.type.value for l in route] == ["ddr", "upi", "ddr"]
+
+
+def test_route_self_is_empty_and_unknown_raises():
+    s = get_system("gh200")
+    assert s.fabric.route("hopper", "hopper") == []
+    with pytest.raises(ValueError):
+        s.fabric.route("hopper", "nonexistent")
+    with pytest.raises(ValueError):
+        s.tier_node("not_a_tier")
+    with pytest.raises(ValueError):
+        get_system("not_a_system")
+
+
+# -- contention -------------------------------------------------------------
+
+def test_contention_monotonic_more_flows_never_faster():
+    """Adding a co-running flow never speeds any existing flow up."""
+    s = get_system("cxl_pool")
+    flows = [Flow("victim", "pool_mem", "host0")]
+    prev = None
+    for k in range(4):
+        rates = max_min_rates(s.fabric, flows)
+        if prev is not None:
+            for fid, r in prev.items():
+                assert rates.get(fid, math.inf) <= r + 1e-6
+        prev = dict(rates)
+        flows.append(Flow(f"n{k}", "pool_mem", "host1"))
+
+
+def test_two_flow_shared_link_degrades_both():
+    """Acceptance: two flows on one shared link each lose bandwidth."""
+    s = get_system("tpu_v5e")
+    solo = effective_bandwidth(s.fabric, "host_dram", "chip0")
+    a, b = Flow("a", "host_dram", "chip0"), Flow("b", "host_dram", "chip0")
+    rates = max_min_rates(s.fabric, [a, b])
+    assert rates["a"] < solo and rates["b"] < solo
+    assert rates["a"] + rates["b"] <= solo * (1 + 1e-9)
+    assert rates["a"] == pytest.approx(solo / 2, rel=1e-6)
+
+
+def test_max_min_respects_demand_cap():
+    s = get_system("tpu_v5e")
+    flows = [Flow("capped", "host_dram", "chip0", demand=1e9),
+             Flow("greedy", "host_dram", "chip0")]
+    rates = max_min_rates(s.fabric, flows)
+    assert rates["capped"] == pytest.approx(1e9, rel=1e-6)
+    # leftover goes to the uncapped flow, not wasted
+    assert rates["greedy"] == pytest.approx(8e9 - 1e9, rel=1e-3)
+
+
+def test_loaded_latency_multi_blows_up():
+    base = 300e-9
+    lat = [loaded_latency_multi(26e9, base, [u * 26e9])
+           for u in (0.1, 0.5, 0.9)]
+    assert lat[0] < lat[1] < lat[2] and lat[2] > 5 * base
+    # aggregate of two sharers == one flow at the summed rate
+    assert loaded_latency_multi(26e9, base, [10e9, 10e9]) \
+        == loaded_latency_multi(26e9, base, [20e9])
+
+
+# -- sim vs closed form -----------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SYSTEMS))
+def test_sim_matches_closed_form_single_flow(name):
+    """Acceptance: uncontended sim within 5% of costmodel.transfer_time."""
+    s = get_system(name)
+    nbytes = 64 * MiB
+    for tier, node in s.tier_map.items():
+        t_sim = simulate(s.fabric,
+                         [Flow("f", node, s.compute, nbytes)])[0].duration
+        t_cf = transfer_time(nbytes, s, tier, s.compute)
+        assert t_sim == pytest.approx(t_cf, rel=0.05), (name, tier)
+
+
+@pytest.mark.parametrize("name", sorted(SYSTEMS))
+def test_sim_matches_tier_topology_closed_form(name):
+    """from_fabric tier topology agrees with the sim too (hbm-like source
+    latency is part of the route, so tolerance stays in the 5% band)."""
+    s = get_system(name)
+    topo = TierTopology.from_fabric(s)
+    nbytes = 64 * MiB
+    tiers = sorted(s.tier_map)
+    if len(tiers) < 2:
+        pytest.skip("single-tier system")
+    src, dst = tiers[0], tiers[1]
+    t_sim = simulate(s.fabric, [Flow("f", s.tier_map[src],
+                                     s.tier_map[dst], nbytes)])[0].duration
+    assert t_sim == pytest.approx(transfer_time(nbytes, topo, src, dst),
+                                  rel=0.05)
+
+
+def test_sim_staggered_arrivals_and_makespan():
+    """Second flow arriving mid-transfer splits the link from then on."""
+    s = get_system("tpu_v5e")
+    nbytes = 80 * MiB           # 10.0 ms solo at 8 GB/s
+    solo = simulate(s.fabric, [Flow("a", "host_dram", "chip0",
+                                    nbytes)])[0].duration
+    res = simulate(s.fabric, [
+        Flow("a", "host_dram", "chip0", nbytes, start=0.0),
+        Flow("b", "host_dram", "chip0", nbytes, start=solo / 2)])
+    ra = next(r for r in res if r.flow.id == "a")
+    rb = next(r for r in res if r.flow.id == "b")
+    assert ra.duration > solo                      # slowed after b arrives
+    assert rb.duration > solo
+    assert makespan(res) == max(ra.finish, rb.finish)
+    # total bytes moved can't beat the link: makespan >= 2*nbytes/link_bw
+    assert makespan(res) >= 2 * nbytes / 8e9 - 1e-9
+
+
+def test_sim_rejects_zero_byte_flow():
+    s = get_system("gh200")
+    with pytest.raises(ValueError):
+        simulate(s.fabric, [Flow("f", "lpddr", "hopper", 0)])
+
+
+# -- scenarios --------------------------------------------------------------
+
+def test_noisy_neighbor_scales_with_neighbors():
+    slow = [noisy_neighbor_pool(n).slowdown["victim"] for n in (1, 2, 4)]
+    assert slow[0] >= 1.0 - 1e-9
+    assert slow[0] <= slow[1] <= slow[2]
+    assert slow[2] > 1.5          # 4 sharers on the switch->pool link
+
+def test_offload_stream_stretches_prefetch():
+    sc = offload_vs_prefetch()
+    assert sc.slowdown["kv_prefetch"] == pytest.approx(2.0, rel=0.05)
+    assert sc.slowdown["offload"] > 1.0
+
+
+def test_bidirectional_fight_only_on_half_duplex():
+    sc = bidirectional_fight()
+    assert sc.slowdown["ddr_read"] == pytest.approx(2.0, rel=0.05)
+    assert sc.slowdown["cxl_read"] == pytest.approx(1.0, rel=1e-6)
+
+
+# -- cost model + placement integration ------------------------------------
+
+def test_contended_transfer_time_exceeds_solo():
+    s = get_system("tpu_v5e")
+    solo = transfer_time(64 * MiB, s, "host", "hbm")
+    cont = contended_transfer_time(64 * MiB, s, "host", "hbm",
+                                   background=[Flow("bg", "host", "hbm")])
+    assert cont == pytest.approx(2 * solo, rel=0.05)
+
+
+def test_placement_reacts_to_interference():
+    """Acceptance: interleave weights differ under a noisy shared link."""
+    cfg = get_config("qwen2-72b")
+    shape = ShapeConfig("big_decode", 32768, 512, "decode")
+    s = get_system("dual_socket_cxl")
+    base = plan_kv_placement(cfg, shape, 1, system=s)
+    cont = plan_kv_placement(cfg, shape, 1, system=s,
+                             background=(Flow("noise", "cxl", "socket0"),))
+    assert base["kv"] == "interleaved"
+    assert base["kv_interleave"] != cont["kv_interleave"]
+    assert (cont["effective_bw"]["cxl"]
+            < base["effective_bw"]["cxl"])
+    # uncontended effective bw == routed bottleneck bw
+    topo = TierTopology.from_fabric(s)
+    assert base["effective_bw"]["cxl"] \
+        == pytest.approx(topo.tier("cxl").read_bw, rel=1e-6)
+
+
+def test_plan_kv_placement_unified_memory():
+    cfg = get_config("qwen2-72b")
+    shape = ShapeConfig("big_decode", 32768, 512, "decode")
+    plan = plan_kv_placement(cfg, shape, 1, system=get_system("mi300a"))
+    assert plan["kv_tiers"] is None
+    assert plan["kv_interleave"] == [1, 0]
+
+
+def test_from_calibration_derives_links():
+    topo = TierTopology.from_calibration({
+        "hbm": dict(capacity=16 << 30, read_bw=819e9, write_bw=819e9,
+                    latency=0.4e-6, memory_kind="device"),
+        "host": dict(capacity=128 << 30, read_bw=8e9, write_bw=8e9,
+                     latency=2e-6, memory_kind="pinned_host"),
+    })
+    assert topo.link_bw("hbm", "host") == 8e9       # no KeyError (issue fix)
+    assert topo.link_bw("host", "hbm") == 8e9
+    assert transfer_time(64 * MiB, topo, "hbm", "host") > 0
+
+
+def test_prefetch_plan_contention_aware():
+    from repro.serving.pager import plan_prefetch
+    plan = plan_prefetch([3, 1, 7], page_bytes=1 * MiB)
+    assert plan.order == (3, 1, 7)
+    assert list(plan.eta) == [3, 1, 7]
+    etas = [plan.eta[p] for p in plan.order]
+    assert etas == sorted(etas)                     # chained fetches
+    assert plan.total_time == pytest.approx(etas[-1])
+    contended = plan_prefetch([3, 1, 7], page_bytes=1 * MiB,
+                              background=(Flow("offload", "host", "hbm"),))
+    assert contended.total_time > plan.total_time
+    assert contended.effective_bw < plan.effective_bw
+    assert plan.ready_by(plan.eta[1]) == [3, 1]
