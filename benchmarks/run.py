@@ -2,31 +2,62 @@
 
 Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §6 for the
 paper-figure -> benchmark index). Run: PYTHONPATH=src python -m benchmarks.run
-[--only substring] [--skip-apps]
+[--only substring] [--skip-apps] [--families micro,kv_quant]
+[--json-out BENCH_kv_quant.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+
+def _families():
+    from repro.heimdall.apps import ALL_APPS
+    from repro.heimdall.interference import ALL_INTERFERENCE
+    from repro.heimdall.kv_quant import ALL_KV_QUANT
+    from repro.heimdall.micro import ALL_MICRO
+    return {"micro": list(ALL_MICRO),
+            "interference": list(ALL_INTERFERENCE),
+            "kv_quant": list(ALL_KV_QUANT),
+            "apps": list(ALL_APPS)}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run benchmarks whose name contains this")
+    ap.add_argument("--families", default=None,
+                    help="comma-separated families to run "
+                         "(micro,interference,kv_quant,apps); default: all "
+                         "minus --skip-* flags")
+    ap.add_argument("--json-out", default=None,
+                    help="write the kv_quant summary (bytes moved, "
+                         "prefetch time, decode latency) to this path")
     ap.add_argument("--skip-apps", action="store_true")
     ap.add_argument("--skip-interference", action="store_true")
+    ap.add_argument("--skip-kv-quant", action="store_true")
     args = ap.parse_args()
 
-    from repro.heimdall.micro import ALL_MICRO
-    from repro.heimdall.apps import ALL_APPS
-    from repro.heimdall.interference import ALL_INTERFERENCE
-
-    benches = (list(ALL_MICRO)
-               + ([] if args.skip_interference else list(ALL_INTERFERENCE))
-               + ([] if args.skip_apps else list(ALL_APPS)))
+    fams = _families()
+    if args.families is not None:
+        names = [f.strip() for f in args.families.split(",") if f.strip()]
+        unknown = [f for f in names if f not in fams]
+        if unknown:
+            sys.exit(f"unknown families {unknown}; have {sorted(fams)}")
+        benches = [b for f in names for b in fams[f]]
+        kv_quant_selected = "kv_quant" in names
+    else:
+        benches = (fams["micro"]
+                   + ([] if args.skip_interference else fams["interference"])
+                   + ([] if args.skip_kv_quant else fams["kv_quant"])
+                   + ([] if args.skip_apps else fams["apps"]))
+        kv_quant_selected = not args.skip_kv_quant
+    if args.json_out and not kv_quant_selected:
+        sys.exit("--json-out writes the kv_quant summary; include the "
+                 "kv_quant family to use it")
     print("name,us_per_call,derived")
     failures = 0
     for bench in benches:
@@ -40,6 +71,11 @@ def main() -> None:
             print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
                   flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json_out:
+        from repro.heimdall.kv_quant import bench_summary
+        with open(args.json_out, "w") as f:
+            json.dump(bench_summary(), f, indent=2)
+        print(f"wrote {args.json_out}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

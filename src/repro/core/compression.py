@@ -14,6 +14,7 @@ tree-level API.
 
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Sequence
 
@@ -51,6 +52,56 @@ def dequantize_int8(q: jax.Array, scales: jax.Array, shape) -> jax.Array:
 def roundtrip_int8(x: jax.Array, block: int = BLOCK) -> jax.Array:
     q, s, shape = quantize_int8(x, block)
     return dequantize_int8(q, s, shape)
+
+
+# --------------------------------------------------------------------------
+# Quantization error model (the pager's accuracy/bandwidth trade-off)
+# --------------------------------------------------------------------------
+
+
+def int8_compression_factor(dtype="bfloat16", block: int = BLOCK) -> float:
+    """Wire-byte compression of blockwise int8 vs the fp dtype.
+
+    One f32 scale rides with each ``block``-element int8 payload, so the
+    factor is ``itemsize * block / (block + 4)`` — ~2x for bf16 KV pages
+    (block = page_size * head_dim per (page, kv_head)), ~4x for f32 state.
+    """
+    return jnp.dtype(dtype).itemsize * block / (block + 4)
+
+
+def expected_int8_rel_error(block: int = BLOCK) -> float:
+    """Expected relative RMS error of symmetric per-block int8 quant on
+    roughly Gaussian data (what KV activations look like).
+
+    Round-to-nearest error per element is ~U(-s/2, s/2) with
+    s = absmax / 127; for an N(0, σ²) block E[absmax] ≈ σ·sqrt(2·ln block),
+    giving rel RMS error ≈ sqrt(2·ln block) / (127·sqrt(12)). Grows only
+    as sqrt(log) in block size — why per-(page, head) blocks are safe.
+    """
+    return math.sqrt(2 * math.log(block)) / (127 * math.sqrt(12.0))
+
+
+def measured_rel_error(x: jax.Array, block: int = BLOCK) -> float:
+    """Measured relative RMS round-trip error (validates the model)."""
+    xf = x.astype(jnp.float32)
+    err = roundtrip_int8(x, block) - xf
+    rms = jnp.sqrt(jnp.mean(xf ** 2))
+    return float(jnp.sqrt(jnp.mean(err ** 2)) / jnp.maximum(rms, 1e-12))
+
+
+def kv_quant_tradeoff(blocks: Sequence[int] = (128, 512, 2048, 8192),
+                      dtype: str = "bfloat16") -> list[dict]:
+    """Accuracy/bandwidth rows for the quantized-KV trade-off table.
+
+    ``blocks`` are per-(page, kv_head) block sizes (page_size * head_dim);
+    each row gives the wire compression factor and the modeled relative RMS
+    error, the two axes of the 'when to enable kv_dtype=int8' decision.
+    """
+    return [{"block_elems": int(b),
+             "compression": round(float(int8_compression_factor(dtype, b)),
+                                  3),
+             "expected_rel_rms_error": expected_int8_rel_error(b)}
+            for b in blocks]
 
 
 # --------------------------------------------------------------------------

@@ -168,7 +168,8 @@ def optimal_offload(**kw) -> OffloadPoint:
     return max(offload_sweep(**kw), key=lambda p: p.tokens_per_s)
 
 
-def transfer_time(nbytes: int, topo, src: str, dst: str) -> float:
+def transfer_time(nbytes: int, topo, src: str, dst: str, *,
+                  compression: float = 1.0) -> float:
     """Table 6: bulk transfer duration between two tiers.
 
     ``topo`` may be a ``TierTopology`` (point-to-point link, the original
@@ -177,25 +178,37 @@ def transfer_time(nbytes: int, topo, src: str, dst: str) -> float:
     fabric graph: bottleneck bandwidth along the path plus the summed hop
     latency. Uncontended by construction; for co-running traffic see
     ``contended_transfer_time`` or ``repro.fabric.sim``.
+
+    ``compression`` > 1 models transfer-compressed payloads (e.g. int8 KV
+    pages): ``nbytes`` stays the *logical* size, the wire carries
+    ``nbytes / compression``. Use ``repro.core.compression.
+    int8_compression_factor`` for the quantized-KV value.
     """
+    if compression <= 0:
+        raise ValueError(f"compression must be > 0, got {compression}")
+    wire = nbytes / compression
     if hasattr(topo, "route_bandwidth"):           # fabric-routed path
-        return (nbytes / topo.route_bandwidth(src, dst)
+        return (wire / topo.route_bandwidth(src, dst)
                 + topo.route_latency(src, dst))
-    return nbytes / topo.link_bw(src, dst) + topo.link_latency(src, dst)
+    return wire / topo.link_bw(src, dst) + topo.link_latency(src, dst)
 
 
 def contended_transfer_time(nbytes: int, system, src: str, dst: str,
-                            background: Sequence = ()) -> float:
+                            background: Sequence = (), *,
+                            compression: float = 1.0) -> float:
     """Transfer duration when background flows share links with it.
 
     ``system`` is a ``repro.fabric.System``; ``background`` is a sequence of
     ``fabric.Flow`` (node- or tier-named endpoints are both accepted).
     Steady-state estimate: the max-min fair rate the transfer gets alongside
     the background, plus routed latency. For arrival/completion dynamics run
-    ``fabric.sim.simulate`` directly.
+    ``fabric.sim.simulate`` directly. ``compression`` as in
+    ``transfer_time`` — logical bytes in, compressed bytes on the wire.
     """
+    if compression <= 0:
+        raise ValueError(f"compression must be > 0, got {compression}")
     from repro.fabric.contention import effective_bandwidth
     s, d = system.tier_node(src), system.tier_node(dst)
     bw = effective_bandwidth(system.fabric, s, d,
                              system.resolve_flows(background))
-    return nbytes / bw + system.fabric.route_latency(s, d)
+    return nbytes / compression / bw + system.fabric.route_latency(s, d)

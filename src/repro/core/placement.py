@@ -136,7 +136,8 @@ def plan_training_placement(cfg: ModelConfig, n_chips: int,
 
 def plan_kv_placement(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
                       topo: Optional[TierTopology] = None,
-                      system=None, background: Sequence = ()) -> dict:
+                      system=None, background: Sequence = (),
+                      kv_compression: float = 1.0) -> dict:
     """KV-cache tier split for serving (paper Fig 24 / §6.1.4).
 
     Returns {'weights': kind, 'kv': kind, 'kv_interleave': [w_fast, w_slow]}.
@@ -149,20 +150,32 @@ def plan_kv_placement(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
     max-min fair rate each tier path achieves alongside the background
     traffic — so a noisy neighbor on a shared CXL/PCIe link shifts pages
     toward the unaffected tier.
+
+    ``kv_compression`` > 1 models transfer-compressed spill-tier pages
+    (e.g. the pager's int8 cold tier): the slow link delivers that many
+    *logical* bytes per wire byte, so its effective bandwidth scales up and
+    the interleave shifts pages toward the cold tier — compressed pages
+    make the spill tier cheaper to lean on.
     """
+    if kv_compression <= 0:
+        raise ValueError(f"kv_compression must be > 0, got {kv_compression}")
     if system is not None:
-        return _plan_kv_fabric(cfg, shape, n_chips, system, background)
+        return _plan_kv_fabric(cfg, shape, n_chips, system, background,
+                               kv_compression)
     topo = topo or TierTopology.tpu_v5e()
     hbm = topo.tier("hbm").capacity
     w_bytes = int(cfg.num_params) * 2 // n_chips
     kv_bytes = _kv_bytes_per_chip(cfg, shape, n_chips)
     if w_bytes + kv_bytes <= hbm * 0.9:
         return {"weights": "device", "kv": "device",
-                "kv_interleave": [1, 0]}
-    tiers = [topo.tier("hbm"), topo.tier("host")]
-    ws = optimal_interleave_weights(tiers)
+                "kv_interleave": [1, 0], "kv_compression": kv_compression}
+    slow = topo.tier("host")
+    slow = dataclasses.replace(slow,
+                               read_bw=slow.read_bw * kv_compression,
+                               write_bw=slow.write_bw * kv_compression)
+    ws = optimal_interleave_weights([topo.tier("hbm"), slow])
     return {"weights": "device", "kv": "interleaved",
-            "kv_interleave": ws}
+            "kv_interleave": ws, "kv_compression": kv_compression}
 
 
 def contended_tier_bandwidths(system, background: Sequence = ()) -> dict:
@@ -180,7 +193,8 @@ def contended_tier_bandwidths(system, background: Sequence = ()) -> dict:
 
 
 def _plan_kv_fabric(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
-                    system, background: Sequence) -> dict:
+                    system, background: Sequence,
+                    kv_compression: float = 1.0) -> dict:
     import dataclasses as _dc
 
     fast_node = system.tier_map[system.kv_tiers[0]] if system.kv_tiers \
@@ -199,8 +213,13 @@ def _plan_kv_fabric(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
     if w_bytes + kv_bytes <= topo.tier(fast).capacity * 0.9:
         return {"weights": fast_kind, "kv": fast_kind or fast,
                 "kv_interleave": [1, 0], "kv_tiers": (fast, slow),
-                "effective_bw": eff}
-    adjusted = [_dc.replace(topo.tier(t), read_bw=eff[t], write_bw=eff[t])
+                "effective_bw": eff, "kv_compression": kv_compression}
+    # compressed spill pages: the slow link carries kv_compression logical
+    # bytes per wire byte, so its *logical* effective bandwidth scales up
+    logical = dict(eff)
+    logical[slow] = eff[slow] * kv_compression
+    adjusted = [_dc.replace(topo.tier(t), read_bw=logical[t],
+                            write_bw=logical[t])
                 for t in (fast, slow)]
     ws = optimal_interleave_weights(adjusted)
     # Contention can drive the spill tier's share to zero (its effective
@@ -209,7 +228,7 @@ def _plan_kv_fabric(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
     kv = "interleaved" if ws[1] > 0 else (fast_kind or fast)
     return {"weights": fast_kind, "kv": kv,
             "kv_interleave": ws, "kv_tiers": (fast, slow),
-            "effective_bw": eff}
+            "effective_bw": eff, "kv_compression": kv_compression}
 
 
 def _kv_bytes_per_chip(cfg: ModelConfig, shape: ShapeConfig,

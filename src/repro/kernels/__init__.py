@@ -1,3 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def default_interpret(interpret):
+    """Shared ops-wrapper policy: Pallas kernels compile on TPU, run in
+    interpreter mode everywhere else, unless the caller overrides."""
+    if interpret is None:
+        import jax
+        return jax.default_backend() != "tpu"
+    return interpret

@@ -8,18 +8,16 @@ ParallelConfig.attention_kernel == "pallas".
 
 from __future__ import annotations
 
-import jax
-
+from repro.kernels import default_interpret
 from repro.kernels.flash_attention.kernel import flash_attention as _kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
                     q_blk=512, kv_blk=512, interpret=None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     return _kernel(q, k, v, causal=causal, window=window, scale=scale,
-                   q_blk=q_blk, kv_blk=kv_blk, interpret=interpret)
+                   q_blk=q_blk, kv_blk=kv_blk,
+                   interpret=default_interpret(interpret))
 
 
 __all__ = ["flash_attention", "flash_attention_ref"]

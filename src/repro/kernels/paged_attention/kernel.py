@@ -8,6 +8,12 @@ addressable: the table maps logical pages to wherever the pager put them.
 
 Grid: (B * Hkv, pages_per_seq); the page axis is sequential with flash
 accumulators in VMEM scratch. One query token per sequence (decode).
+
+``paged_attention_quant`` is the fused int8 variant: K/V pools arrive as
+int8 plus per-(page, kv_head) fp32 scales (kernels/quant.quantize_pages
+layout), the page DMA moves half the bytes over the contended HBM<->host
+path, and dequantization happens in-register after the VMEM load — no fp
+copy of the pool ever materializes.
 """
 
 from __future__ import annotations
@@ -23,11 +29,14 @@ NEG_INF = -1e30
 LANES = 128
 
 
-def _kernel(block_table, seq_lens,            # scalar-prefetch (SMEM)
-            q_ref, k_ref, v_ref, o_ref,       # blocks (VMEM)
-            m_ref, l_ref, acc_ref, *,
-            page: int, n_pages_per_seq: int, scale: float, G: int,
-            hkv: int):
+def _flash_page_step(seq_lens, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
+                     page: int, n_pages_per_seq: int, scale: float, G: int,
+                     hkv: int):
+    """One flash-accumulator update over a single (already fp32) KV page.
+
+    Shared by the fp and int8 kernels — the only difference between them is
+    how k/v were produced from their VMEM blocks.
+    """
     bh = pl.program_id(0)
     j = pl.program_id(1)
     b = bh // hkv
@@ -38,9 +47,6 @@ def _kernel(block_table, seq_lens,            # scalar-prefetch (SMEM)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                 # (G, d)
-    k = k_ref[0].astype(jnp.float32)                 # (page, d)
-    v = v_ref[0].astype(jnp.float32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (G, page), 1)
@@ -63,6 +69,34 @@ def _kernel(block_table, seq_lens,            # scalar-prefetch (SMEM)
         l = l_ref[:, :1]
         l = jnp.where(l == 0.0, 1.0, l)
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _kernel(block_table, seq_lens,            # scalar-prefetch (SMEM)
+            q_ref, k_ref, v_ref, o_ref,       # blocks (VMEM)
+            m_ref, l_ref, acc_ref, *,
+            page: int, n_pages_per_seq: int, scale: float, G: int,
+            hkv: int):
+    q = q_ref[0].astype(jnp.float32)                 # (G, d)
+    k = k_ref[0].astype(jnp.float32)                 # (page, d)
+    v = v_ref[0].astype(jnp.float32)
+    _flash_page_step(seq_lens, q, k, v, o_ref, m_ref, l_ref, acc_ref,
+                     page=page, n_pages_per_seq=n_pages_per_seq,
+                     scale=scale, G=G, hkv=hkv)
+
+
+def _kernel_quant(block_table, seq_lens,      # scalar-prefetch (SMEM)
+                  q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  page: int, n_pages_per_seq: int, scale: float, G: int,
+                  hkv: int):
+    """int8 page blocks + per-(page, head) scale blocks: dequantize in
+    registers right after the VMEM DMA — the DMA itself moved int8."""
+    q = q_ref[0].astype(jnp.float32)                 # (G, d)
+    k = k_ref[0].astype(jnp.float32) * ks_ref[0, 0]  # (page, d) from int8
+    v = v_ref[0].astype(jnp.float32) * vs_ref[0, 0]
+    _flash_page_step(seq_lens, q, k, v, o_ref, m_ref, l_ref, acc_ref,
+                     page=page, n_pages_per_seq=n_pages_per_seq,
+                     scale=scale, G=G, hkv=hkv)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
@@ -110,4 +144,75 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B * Hkv, G, d), q.dtype),
         interpret=interpret,
     )(block_table, seq_lens, qf, kf, vf)
+    return out.reshape(B, Hkv, G, d).reshape(B, Hq, d)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_quant(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, k_scales: jax.Array,
+                          v_scales: jax.Array, block_table: jax.Array,
+                          seq_lens: jax.Array, *,
+                          scale: float | None = None,
+                          interpret: bool = True) -> jax.Array:
+    """Fused int8 paged decode attention.
+
+    q: (B, Hq, d) fp; k/v_pages: (n_pages, page, Hkv, d) int8;
+    k/v_scales: (n_pages, Hkv) f32 (kernels/quant.quantize_pages layout);
+    block_table: (B, pages_per_seq); seq_lens: (B,) -> (B, Hq, d).
+
+    Identical grid/indirection to ``paged_attention``; each page DMA moves
+    int8 (≈2x fewer bytes than bf16) plus one scalar scale per (page, head),
+    and the dequant multiply runs on the VPU before the MXU dot.
+    """
+    B, Hq, d = q.shape
+    n_pages, page, Hkv, _ = k_pages.shape
+    G = Hq // Hkv
+    pps = block_table.shape[1]
+    scale = d ** -0.5 if scale is None else scale
+
+    qf = q.reshape(B, Hkv, G, d).reshape(B * Hkv, G, d)
+    kf = k_pages.transpose(0, 2, 1, 3).reshape(n_pages * Hkv, page, d)
+    vf = v_pages.transpose(0, 2, 1, 3).reshape(n_pages * Hkv, page, d)
+    # scale planes ride as (n_pages*Hkv, LANES) so each page block's scalar
+    # lands in VMEM next to its int8 page (lane-width row per block)
+    ksf = jnp.broadcast_to(k_scales.reshape(n_pages * Hkv, 1),
+                           (n_pages * Hkv, LANES))
+    vsf = jnp.broadcast_to(v_scales.reshape(n_pages * Hkv, 1),
+                           (n_pages * Hkv, LANES))
+
+    def page_map(bh, j, table, lens):
+        b = bh // Hkv
+        h = bh % Hkv
+        return (table[b, j] * Hkv + h, 0, 0)
+
+    def scale_map(bh, j, table, lens):
+        b = bh // Hkv
+        h = bh % Hkv
+        return (table[b, j] * Hkv + h, 0)
+
+    kernel = functools.partial(_kernel_quant, page=page,
+                               n_pages_per_seq=pps, scale=scale, G=G,
+                               hkv=Hkv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * Hkv, pps),
+        in_specs=[
+            pl.BlockSpec((1, G, d), lambda bh, j, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, page, d), page_map),
+            pl.BlockSpec((1, page, d), page_map),
+            pl.BlockSpec((1, LANES), scale_map),
+            pl.BlockSpec((1, LANES), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, G, d), lambda bh, j, *_: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, LANES), jnp.float32),
+            pltpu.VMEM((G, LANES), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, d), q.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, qf, kf, vf, ksf, vsf)
     return out.reshape(B, Hkv, G, d).reshape(B, Hq, d)

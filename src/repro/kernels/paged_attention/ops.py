@@ -2,18 +2,26 @@
 
 from __future__ import annotations
 
-import jax
-
-from repro.kernels.paged_attention.kernel import paged_attention as _kernel
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels import default_interpret
+from repro.kernels.paged_attention.kernel import (
+    paged_attention as _kernel, paged_attention_quant as _kernel_quant)
+from repro.kernels.paged_attention.ref import (paged_attention_quant_ref,
+                                               paged_attention_ref)
 
 
 def paged_attention(q, k_pages, v_pages, block_table, seq_lens, *,
                     scale=None, interpret=None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     return _kernel(q, k_pages, v_pages, block_table, seq_lens,
-                   scale=scale, interpret=interpret)
+                   scale=scale, interpret=default_interpret(interpret))
 
 
-__all__ = ["paged_attention", "paged_attention_ref"]
+def paged_attention_quant(q, k_pages, v_pages, k_scales, v_scales,
+                          block_table, seq_lens, *, scale=None,
+                          interpret=None):
+    return _kernel_quant(q, k_pages, v_pages, k_scales, v_scales,
+                         block_table, seq_lens, scale=scale,
+                         interpret=default_interpret(interpret))
+
+
+__all__ = ["paged_attention", "paged_attention_ref",
+           "paged_attention_quant", "paged_attention_quant_ref"]

@@ -36,3 +36,15 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_seq.astype(jnp.float32))
     return out.reshape(B, Hq, d).astype(q.dtype)
+
+
+def paged_attention_quant_ref(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, k_scales: jax.Array,
+                              v_scales: jax.Array, block_table: jax.Array,
+                              seq_lens: jax.Array,
+                              scale: float | None = None) -> jax.Array:
+    """Oracle for the int8 path: dequantize the pools (per-(page, head)
+    scales) then run the fp reference."""
+    kf = k_pages.astype(jnp.float32) * k_scales[:, None, :, None]
+    vf = v_pages.astype(jnp.float32) * v_scales[:, None, :, None]
+    return paged_attention_ref(q, kf, vf, block_table, seq_lens, scale)

@@ -4,6 +4,12 @@ Tiles of (rows, 256) stream HBM->VMEM; each row is one quantization block
 (absmax reduce + scale + round on the VPU). This is the compute the tier
 engine runs before pushing bytes across the HBM<->host link, so its
 roofline is pure memory bandwidth — tile sizes keep it that way.
+
+The paged variants (``quantize_pages``/``dequantize_pages``) reuse the same
+row-block kernels with one row per (page, kv_head): the granularity the KV
+pager spills at, so a single page (and its scales) is self-contained when it
+crosses the fabric and the paged-attention kernel can dequantize in-register
+with one scalar per (page, head) block.
 """
 
 from __future__ import annotations
@@ -52,6 +58,69 @@ def quantize(x: jax.Array, block: int = BLOCK, *,
         interpret=interpret,
     )(xb)
     return q.reshape(-1), s[:, 0]
+
+
+def _row_chunk(n_rows: int, blk: int) -> int:
+    """Largest divisor of n_rows whose (rows, blk) f32 tile stays within
+    the flat kernel's VMEM budget (ROWS x BLOCK elements = 256 KiB)."""
+    cap = max(1, min(ROWS, (ROWS * BLOCK) // blk))
+    for r in range(min(cap, n_rows), 0, -1):
+        if n_rows % r == 0:
+            return r
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_pages(pages: jax.Array, *, interpret: bool = True):
+    """Per-(page, kv_head) int8 quantization of a KV page pool.
+
+    pages: (n_pages, page_size, Hkv, d) -> (q int8 same shape,
+    scales f32 (n_pages, Hkv)). One quant block per (page, head) — the unit
+    the pager moves across the fabric, so each spilled page carries its own
+    scales and dequantizes independently of its pool neighbours.
+    """
+    n_pages, page, hkv, d = pages.shape
+    rows = n_pages * hkv
+    blk = page * d
+    xb = pages.transpose(0, 2, 1, 3).reshape(rows, blk)
+    r = _row_chunk(rows, blk)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(rows // r,),
+        in_specs=[pl.BlockSpec((r, blk), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((r, blk), lambda i: (i, 0)),
+                   pl.BlockSpec((r, 128), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, blk), jnp.int8),
+                   jax.ShapeDtypeStruct((rows, 128), jnp.float32)],
+        interpret=interpret,
+    )(xb)
+    qp = q.reshape(n_pages, hkv, page, d).transpose(0, 2, 1, 3)
+    return qp, s[:, 0].reshape(n_pages, hkv)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def dequantize_pages(q: jax.Array, scales: jax.Array, *,
+                     out_dtype=jnp.float32,
+                     interpret: bool = True) -> jax.Array:
+    """Inverse of ``quantize_pages``: (q int8 pool, (n_pages, Hkv) scales)
+    -> fp pool of the same shape."""
+    n_pages, page, hkv, d = q.shape
+    rows = n_pages * hkv
+    blk = page * d
+    qb = q.transpose(0, 2, 1, 3).reshape(rows, blk)
+    sb = jnp.broadcast_to(scales.reshape(rows, 1), (rows, 128))
+    r = _row_chunk(rows, blk)
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=(rows // r,),
+        in_specs=[pl.BlockSpec((r, blk), lambda i: (i, 0)),
+                  pl.BlockSpec((r, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((r, blk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, blk), jnp.float32),
+        interpret=interpret,
+    )(qb, sb)
+    return x.reshape(n_pages, hkv, page, d).transpose(0, 2, 1, 3) \
+        .astype(out_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))

@@ -2,22 +2,35 @@
 
 from __future__ import annotations
 
-import jax
+import jax.numpy as jnp
 
-from repro.kernels.quant.kernel import dequantize as _deq, quantize as _q
-from repro.kernels.quant.ref import dequantize_ref, quantize_ref
+from repro.kernels import default_interpret
+from repro.kernels.quant.kernel import (dequantize as _deq,
+                                        dequantize_pages as _deq_pages,
+                                        quantize as _q,
+                                        quantize_pages as _q_pages)
+from repro.kernels.quant.ref import (dequantize_pages_ref, dequantize_ref,
+                                     quantize_pages_ref, quantize_ref)
 
 
 def quantize(x, block: int = 256, interpret=None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return _q(x, block, interpret=interpret)
+    return _q(x, block, interpret=default_interpret(interpret))
 
 
 def dequantize(q, scales, block: int = 256, interpret=None):
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return _deq(q, scales, block, interpret=interpret)
+    return _deq(q, scales, block, interpret=default_interpret(interpret))
 
 
-__all__ = ["quantize", "dequantize", "quantize_ref", "dequantize_ref"]
+def quantize_pages(pages, interpret=None):
+    return _q_pages(pages, interpret=default_interpret(interpret))
+
+
+def dequantize_pages(q, scales, out_dtype=None, interpret=None):
+    out_dtype = jnp.float32 if out_dtype is None else jnp.dtype(out_dtype)
+    return _deq_pages(q, scales, out_dtype=out_dtype,
+                      interpret=default_interpret(interpret))
+
+
+__all__ = ["quantize", "dequantize", "quantize_ref", "dequantize_ref",
+           "quantize_pages", "dequantize_pages", "quantize_pages_ref",
+           "dequantize_pages_ref"]

@@ -24,3 +24,19 @@ def quantize_ref(x: jax.Array, block: int = 256):
 def dequantize_ref(q: jax.Array, scales: jax.Array, block: int = 256):
     return (q.reshape(-1, block).astype(jnp.float32)
             * scales[:, None]).reshape(-1)
+
+
+def quantize_pages_ref(pages: jax.Array):
+    """Per-(page, kv_head) blocks: (n_pages, page, Hkv, d) ->
+    (q int8 same shape, scales f32 (n_pages, Hkv))."""
+    x = pages.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=(1, 3), keepdims=True)
+    scales = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scales), -127, 127).astype(jnp.int8)
+    return q, scales[:, 0, :, 0]
+
+
+def dequantize_pages_ref(q: jax.Array, scales: jax.Array,
+                         out_dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scales[:, None, :, None]).astype(out_dtype)

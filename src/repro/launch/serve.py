@@ -7,6 +7,17 @@ mode whose win the cost model predicts via `overlap`).
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
       --requests 4 --prompt 64 --gen 32 [--offload-weights]
+
+``DecodeScheduler`` is the deadline-aware decode loop over a tier-split
+``PagedKVCache``: it plans host->HBM page prefetches through the fabric
+simulator and admits each sequence into the decode batch at the first step
+deadline by which *its* pages have landed (``PrefetchPlan.ready_by``),
+instead of stalling the whole batch until the last page arrives. With the
+pager's int8 cold tier the pages land ~2x sooner, which is exactly the win
+``--paged-sim`` reports (fp16 vs int8, same page set, same contention):
+
+  PYTHONPATH=src python -m repro.launch.serve --paged-sim \
+      [--system tpu_v5e] [--requests 8] [--gen 32]
 """
 
 from __future__ import annotations
@@ -100,6 +111,185 @@ class ServeEngine:
                 for i, r in enumerate(requests)]
 
 
+# --------------------------------------------------------------------------
+# Deadline-aware decode scheduling over the paged, tiered KV cache
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeStep:
+    """One fired decode step of the scheduled loop."""
+    step: int
+    deadline: float              # when the step fires (s, sim time)
+    seq_ids: tuple               # sequences decoded in this step's batch
+    pages_resident: int          # host pages landed by the deadline
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSchedule:
+    """A simulated decode run: per-step batches + completion accounting."""
+    steps: tuple                 # DecodeStep in firing order
+    admit_time: dict             # seq id -> sim time it joined the batch
+    finish_time: dict            # seq id -> sim time its last step is done
+    makespan: float              # when the last sequence finishes (s)
+    sync_makespan: float         # baseline: stall until ALL pages landed
+    prefetch_total: float        # PrefetchPlan.total_time
+    step_time: float
+
+    @property
+    def mean_completion(self) -> float:
+        vals = list(self.finish_time.values())
+        return sum(vals) / len(vals) if vals else 0.0
+
+    @property
+    def speedup(self) -> float:
+        """Mean-latency win of deadline-aware admission: in the sync
+        baseline every sequence waits for the WHOLE page set, so its mean
+        completion equals the sync makespan; here each sequence finishes
+        n_steps after its own pages landed."""
+        return self.sync_makespan / max(self.mean_completion, 1e-18)
+
+
+class DecodeScheduler:
+    """Fires decode steps as prefetched pages land (PrefetchPlan.ready_by).
+
+    The paper-faithful loop stalls every decode step until the whole page
+    set is resident; this scheduler admits each sequence into the continuous
+    batch at the first step deadline by which *its* host-tier pages have
+    arrived, so sequences whose pages live in HBM (or landed early) decode
+    while the slow-tier fetches are still in flight. With the pager's int8
+    cold tier (``PagerConfig(kv_dtype="int8")``) every ETA is ~2x sooner —
+    the bandwidth win turns directly into earlier admission.
+    """
+
+    def __init__(self, cache, *, system=None, background: tuple = (),
+                 step_time: float = 500e-6):
+        self.cache = cache
+        self.system = system
+        self.background = background
+        self.step_time = float(step_time)
+
+    def ready_times(self, seq_ids: list, plan) -> dict:
+        """Sim time each sequence's host pages are fully resident."""
+        out = {}
+        for s in seq_ids:
+            pages = [p for p in self.cache.tables[s]
+                     if self.cache.tier_of_page[p] == 1]
+            out[s] = max((plan.eta[p] for p in pages), default=0.0)
+        return out
+
+    def schedule(self, seq_ids: list, n_steps: int) -> DecodeSchedule:
+        """Simulate ``n_steps`` decode steps per sequence, admitting each
+        sequence at its pages' arrival (deadline-aware continuous batch)."""
+        plan = self.cache.plan_prefetch(seq_ids, system=self.system,
+                                        background=self.background)
+        ready = self.ready_times(seq_ids, plan)
+        remaining = {s: n_steps for s in seq_ids}
+        admit: dict = {}
+        finish: dict = {}
+        steps = []
+        t = min(ready.values()) if ready else 0.0
+        k = 0
+        while any(r > 0 for r in remaining.values()):
+            resident = set(plan.ready_by(t))
+            active = tuple(s for s in seq_ids
+                           if remaining[s] > 0 and ready[s] <= t)
+            if not active:                  # idle until the next arrival
+                t = min(ready[s] for s in seq_ids if remaining[s] > 0)
+                continue
+            for s in active:
+                admit.setdefault(s, t)
+                remaining[s] -= 1
+                if remaining[s] == 0:
+                    finish[s] = t + self.step_time
+            steps.append(DecodeStep(k, t, active, len(resident)))
+            k += 1
+            t += self.step_time
+        makespan = max(finish.values()) if finish else 0.0
+        sync = plan.total_time + n_steps * self.step_time
+        return DecodeSchedule(tuple(steps), admit, finish, makespan, sync,
+                              plan.total_time, self.step_time)
+
+
+def paired_kv_caches(*, requests: int = 8, tokens: int = 1056,
+                     page_size: int = 64, kv_heads: int = 8,
+                     head_dim: int = 128, weights: tuple = (2, 1)) -> dict:
+    """{'fp16': pager, 'int8': pager} with identical placement and fill —
+    the 'same page set' premise every fp-vs-int8 ratio rests on lives in
+    exactly one place (the kv_quant benchmark family reuses this)."""
+    from repro.serving.pager import PagedKVCache, PagerConfig
+    n_pages = max(64, requests * (-(-tokens // page_size)) + 8)
+    kv = jnp.zeros((tokens, kv_heads, head_dim), jnp.bfloat16)
+    caches = {}
+    for label, kv_dtype in (("fp16", None), ("int8", "int8")):
+        c = PagedKVCache(PagerConfig(
+            page_size=page_size, n_pages=n_pages, kv_heads=kv_heads,
+            head_dim=head_dim, weights=weights, dtype="bfloat16",
+            kv_dtype=kv_dtype))
+        for s in range(requests):
+            c.allocate(s)
+            c.append(s, kv, kv)
+        caches[label] = c
+    return caches
+
+
+def simulate_paged_decode(*, requests: int = 8, prompt: int = 1024,
+                          gen: int = 32, page_size: int = 64,
+                          kv_heads: int = 8, head_dim: int = 128,
+                          weights: tuple = (2, 1), system_name: str =
+                          "tpu_v5e", step_us: float = 100.0,
+                          with_background: bool = True) -> dict:
+    """fp16-vs-int8 decode scheduling comparison on one page set.
+
+    Builds two pagers with identical page placement — one bf16, one with
+    the int8 cold tier — fills them with the same sequences, and schedules
+    the same decode run against the same background traffic. The report is
+    the headline benchmark: bytes over the host link, simulated contended
+    prefetch completion, and decode makespan.
+    """
+    from repro.fabric.contention import Flow
+    from repro.fabric.systems import get_system
+
+    system = get_system(system_name)
+    # fixed-size background stream: both the fp16 and int8 runs must see
+    # IDENTICAL contention (an open-ended flow would be auto-sized from
+    # each cache's own page bytes, quietly shrinking the int8 background)
+    bg = (Flow("offload", "host", "hbm", nbytes=256 << 20),) \
+        if with_background else ()
+    toks = prompt + gen
+    out = {"system": system_name, "requests": requests,
+           "tokens_per_seq": toks, "step_us": step_us,
+           "background": bool(with_background)}
+    caches = paired_kv_caches(requests=requests, tokens=toks,
+                              page_size=page_size, kv_heads=kv_heads,
+                              head_dim=head_dim, weights=weights)
+    for label, cache in caches.items():
+        seqs = list(range(requests))
+        sched = DecodeScheduler(cache, system=system, background=bg,
+                                step_time=step_us * 1e-6)
+        ds = sched.schedule(seqs, gen)
+        n_host = len(cache.host_pages(seqs))
+        out[label] = {
+            "host_pages": n_host,
+            "page_bytes": cache.host_page_bytes,
+            "host_link_bytes": n_host * cache.host_page_bytes,
+            "prefetch_total_s": ds.prefetch_total,
+            "mean_completion_s": ds.mean_completion,
+            "decode_makespan_s": ds.makespan,
+            "sync_makespan_s": ds.sync_makespan,
+            "overlap_speedup": round(ds.speedup, 3),
+            "first_admit_s": min(ds.admit_time.values(), default=0.0),
+        }
+    fp, q = out["fp16"], out["int8"]
+    out["bytes_reduction"] = round(
+        fp["host_link_bytes"] / max(q["host_link_bytes"], 1), 3)
+    out["prefetch_speedup"] = round(
+        fp["prefetch_total_s"] / max(q["prefetch_total_s"], 1e-18), 3)
+    out["decode_latency_speedup"] = round(
+        fp["mean_completion_s"] / max(q["mean_completion_s"], 1e-18), 3)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
@@ -108,7 +298,18 @@ def main():
     ap.add_argument("--prompt", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--offload-weights", action="store_true")
+    ap.add_argument("--paged-sim", action="store_true",
+                    help="simulated fp16-vs-int8 paged decode scheduling "
+                         "report (no model run)")
+    ap.add_argument("--system", default="tpu_v5e")
+    ap.add_argument("--step-us", type=float, default=100.0)
     args = ap.parse_args()
+
+    if args.paged_sim:
+        print(json.dumps(simulate_paged_decode(
+            requests=args.requests, gen=args.gen,
+            system_name=args.system, step_us=args.step_us), indent=2))
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

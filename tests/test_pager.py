@@ -73,6 +73,56 @@ def test_tiered_pages_spill_roundtrip():
     np.testing.assert_allclose(np.asarray(c.k_pool), before)
 
 
+def test_batched_append_matches_per_token():
+    """One batched scatter == the per-token append loop (hot-path rewrite
+    parity), across page boundaries and multiple appends."""
+    rng = np.random.default_rng(4)
+    a = PagedKVCache(_cfg())
+    b = PagedKVCache(_cfg())
+    a.allocate(0)
+    b.allocate(0)
+    for chunk in (5, 11, 1, 8):              # crosses page boundaries
+        k = jnp.asarray(rng.normal(size=(chunk, 2, 16)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(chunk, 2, 16)), jnp.float32)
+        a.append(0, k, v)
+        for t in range(chunk):               # reference: token at a time
+            b.append(0, k[t:t + 1], v[t:t + 1])
+    assert a.tables == b.tables and a.lens == b.lens
+    np.testing.assert_allclose(np.asarray(a.k_pool), np.asarray(b.k_pool))
+    np.testing.assert_allclose(np.asarray(a.v_pool), np.asarray(b.v_pool))
+
+
+def test_block_table_cached_and_invalidated():
+    c = PagedKVCache(_cfg())
+    c.allocate(0)
+    c.append(0, jnp.ones((9, 2, 16)), jnp.ones((9, 2, 16)))
+    bt1, l1 = c.block_table([0])
+    bt2, l2 = c.block_table([0])
+    assert bt1 is bt2 and l1 is l2           # cache hit, no rebuild
+    c.append(0, jnp.ones((1, 2, 16)), jnp.ones((1, 2, 16)))
+    bt3, l3 = c.block_table([0])
+    assert bt3 is not bt1
+    assert int(l3[0]) == 10
+    c.free_seq(0)
+    c.allocate(0)
+    c.append(0, jnp.ones((2, 2, 16)), jnp.ones((2, 2, 16)))
+    _, l4 = c.block_table([0])
+    assert int(l4[0]) == 2                   # free_seq invalidated too
+
+
+def test_free_list_fifo_order():
+    """deque-backed free list still hands out pages in FIFO order (the
+    interleave assignment depends on it)."""
+    c = PagedKVCache(_cfg(n_pages=8))
+    c.allocate(0)
+    c.append(0, jnp.ones((24, 2, 16)), jnp.ones((24, 2, 16)))
+    assert c.tables[0] == [0, 1, 2]
+    c.free_seq(0)
+    c.allocate(1)
+    c.append(1, jnp.ones((8, 2, 16)), jnp.ones((8, 2, 16)))
+    assert c.tables[1] == [3]                # continues round-robin order
+
+
 @given(n_seqs=st.integers(1, 4), lens=st.data())
 @settings(max_examples=20, deadline=None)
 def test_block_tables_disjoint(n_seqs, lens):
