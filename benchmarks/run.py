@@ -2,8 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §6 for the
 paper-figure -> benchmark index). Run: PYTHONPATH=src python -m benchmarks.run
-[--only substring] [--skip-apps] [--families micro,kv_quant]
+[--only substring] [--skip-apps] [--families micro,kv_quant,qos]
 [--json-out BENCH_kv_quant.json]
+
+``--json-out`` writes the JSON summary of the selected summarizable family
+(kv_quant or qos); select exactly one of them when using it.
 """
 
 from __future__ import annotations
@@ -19,10 +22,26 @@ def _families():
     from repro.heimdall.interference import ALL_INTERFERENCE
     from repro.heimdall.kv_quant import ALL_KV_QUANT
     from repro.heimdall.micro import ALL_MICRO
+    from repro.heimdall.qos import ALL_QOS
     return {"micro": list(ALL_MICRO),
             "interference": list(ALL_INTERFERENCE),
             "kv_quant": list(ALL_KV_QUANT),
+            "qos": list(ALL_QOS),
             "apps": list(ALL_APPS)}
+
+
+def _summary_fn(family: str):
+    """Family -> JSON summary builder (the BENCH_<family>.json payloads)."""
+    if family == "kv_quant":
+        from repro.heimdall.kv_quant import bench_summary
+        return bench_summary
+    if family == "qos":
+        from repro.heimdall.qos import qos_summary
+        return qos_summary
+    return None
+
+
+SUMMARIZABLE = ("kv_quant", "qos")
 
 
 def main() -> None:
@@ -31,14 +50,15 @@ def main() -> None:
                     help="run benchmarks whose name contains this")
     ap.add_argument("--families", default=None,
                     help="comma-separated families to run "
-                         "(micro,interference,kv_quant,apps); default: all "
-                         "minus --skip-* flags")
+                         "(micro,interference,kv_quant,qos,apps); default: "
+                         "all minus --skip-* flags")
     ap.add_argument("--json-out", default=None,
-                    help="write the kv_quant summary (bytes moved, "
-                         "prefetch time, decode latency) to this path")
+                    help="write the selected summarizable family's JSON "
+                         "summary (kv_quant or qos) to this path")
     ap.add_argument("--skip-apps", action="store_true")
     ap.add_argument("--skip-interference", action="store_true")
     ap.add_argument("--skip-kv-quant", action="store_true")
+    ap.add_argument("--skip-qos", action="store_true")
     args = ap.parse_args()
 
     fams = _families()
@@ -48,16 +68,19 @@ def main() -> None:
         if unknown:
             sys.exit(f"unknown families {unknown}; have {sorted(fams)}")
         benches = [b for f in names for b in fams[f]]
-        kv_quant_selected = "kv_quant" in names
+        selected_summaries = [f for f in SUMMARIZABLE if f in names]
     else:
         benches = (fams["micro"]
                    + ([] if args.skip_interference else fams["interference"])
                    + ([] if args.skip_kv_quant else fams["kv_quant"])
+                   + ([] if args.skip_qos else fams["qos"])
                    + ([] if args.skip_apps else fams["apps"]))
-        kv_quant_selected = not args.skip_kv_quant
-    if args.json_out and not kv_quant_selected:
-        sys.exit("--json-out writes the kv_quant summary; include the "
-                 "kv_quant family to use it")
+        selected_summaries = [
+            f for f, skipped in (("kv_quant", args.skip_kv_quant),
+                                 ("qos", args.skip_qos)) if not skipped]
+    if args.json_out and len(selected_summaries) != 1:
+        sys.exit("--json-out writes one family's JSON summary; select "
+                 f"exactly one of {SUMMARIZABLE} (got {selected_summaries})")
     print("name,us_per_call,derived")
     failures = 0
     for bench in benches:
@@ -72,9 +95,9 @@ def main() -> None:
                   flush=True)
             traceback.print_exc(file=sys.stderr)
     if args.json_out:
-        from repro.heimdall.kv_quant import bench_summary
+        summary = _summary_fn(selected_summaries[0])()
         with open(args.json_out, "w") as f:
-            json.dump(bench_summary(), f, indent=2)
+            json.dump(summary, f, indent=2)
         print(f"wrote {args.json_out}", file=sys.stderr)
     if failures:
         sys.exit(1)

@@ -195,7 +195,9 @@ def transfer_time(nbytes: int, topo, src: str, dst: str, *,
 
 def contended_transfer_time(nbytes: int, system, src: str, dst: str,
                             background: Sequence = (), *,
-                            compression: float = 1.0) -> float:
+                            compression: float = 1.0,
+                            weight: float = 1.0,
+                            priority: int = 0) -> float:
     """Transfer duration when background flows share links with it.
 
     ``system`` is a ``repro.fabric.System``; ``background`` is a sequence of
@@ -204,11 +206,18 @@ def contended_transfer_time(nbytes: int, system, src: str, dst: str,
     the background, plus routed latency. For arrival/completion dynamics run
     ``fabric.sim.simulate`` directly. ``compression`` as in
     ``transfer_time`` — logical bytes in, compressed bytes on the wire.
+    ``weight``/``priority`` are the transfer's DMA QoS class: a
+    higher-priority transfer rides over bulk background on a shared link
+    instead of splitting it; a starved (lower-priority) transfer gets
+    ``inf`` — in steady state it never completes.
     """
     if compression <= 0:
         raise ValueError(f"compression must be > 0, got {compression}")
     from repro.fabric.contention import effective_bandwidth
     s, d = system.tier_node(src), system.tier_node(dst)
     bw = effective_bandwidth(system.fabric, s, d,
-                             system.resolve_flows(background))
+                             system.resolve_flows(background),
+                             weight=weight, priority=priority)
+    if bw <= 0:
+        return math.inf
     return nbytes / compression / bw + system.fabric.route_latency(s, d)

@@ -137,7 +137,9 @@ def plan_training_placement(cfg: ModelConfig, n_chips: int,
 def plan_kv_placement(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
                       topo: Optional[TierTopology] = None,
                       system=None, background: Sequence = (),
-                      kv_compression: float = 1.0) -> dict:
+                      kv_compression: float = 1.0,
+                      flow_weight: float = 1.0,
+                      flow_priority: int = 0) -> dict:
     """KV-cache tier split for serving (paper Fig 24 / §6.1.4).
 
     Returns {'weights': kind, 'kv': kind, 'kv_interleave': [w_fast, w_slow]}.
@@ -156,12 +158,18 @@ def plan_kv_placement(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
     *logical* bytes per wire byte, so its effective bandwidth scales up and
     the interleave shifts pages toward the cold tier — compressed pages
     make the spill tier cheaper to lean on.
+
+    ``flow_weight``/``flow_priority`` are the KV traffic's DMA QoS class
+    (see ``fabric.contention.Flow``): with the pager's page fetches riding
+    at a higher priority than bulk background streams, the contended
+    effective bandwidths — and therefore the interleave — recover toward
+    the uncontended plan even under a noisy neighbor.
     """
     if kv_compression <= 0:
         raise ValueError(f"kv_compression must be > 0, got {kv_compression}")
     if system is not None:
         return _plan_kv_fabric(cfg, shape, n_chips, system, background,
-                               kv_compression)
+                               kv_compression, flow_weight, flow_priority)
     topo = topo or TierTopology.tpu_v5e()
     hbm = topo.tier("hbm").capacity
     w_bytes = int(cfg.num_params) * 2 // n_chips
@@ -178,23 +186,28 @@ def plan_kv_placement(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
             "kv_interleave": ws, "kv_compression": kv_compression}
 
 
-def contended_tier_bandwidths(system, background: Sequence = ()) -> dict:
+def contended_tier_bandwidths(system, background: Sequence = (), *,
+                              weight: float = 1.0,
+                              priority: int = 0) -> dict:
     """Effective read bandwidth of each mapped tier under background flows.
 
-    Probes each compute->tier route with max-min fair sharing against the
-    background; with no background this equals the routed bottleneck
-    bandwidth ``TierTopology.from_fabric`` reports.
+    Probes each compute->tier route with QoS-aware max-min fair sharing
+    against the background (``weight``/``priority`` are the probe's DMA
+    class); with no background this equals the routed bottleneck bandwidth
+    ``TierTopology.from_fabric`` reports.
     """
     from repro.fabric.contention import effective_bandwidth
     bg = system.resolve_flows(background)
     return {tier: effective_bandwidth(system.fabric, node, system.compute,
-                                      bg)
+                                      bg, weight=weight, priority=priority)
             for tier, node in system.tier_map.items()}
 
 
 def _plan_kv_fabric(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
                     system, background: Sequence,
-                    kv_compression: float = 1.0) -> dict:
+                    kv_compression: float = 1.0,
+                    flow_weight: float = 1.0,
+                    flow_priority: int = 0) -> dict:
     import dataclasses as _dc
 
     fast_node = system.tier_map[system.kv_tiers[0]] if system.kv_tiers \
@@ -203,13 +216,15 @@ def _plan_kv_fabric(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
     if system.kv_tiers is None:           # unified memory (MI300A): no spill
         return {"weights": fast_kind, "kv": fast_kind or "unified",
                 "kv_interleave": [1, 0], "kv_tiers": None,
-                "effective_bw": contended_tier_bandwidths(system,
-                                                          background)}
+                "effective_bw": contended_tier_bandwidths(
+                    system, background, weight=flow_weight,
+                    priority=flow_priority)}
     fast, slow = system.kv_tiers
     topo = TierTopology.from_fabric(system)
     w_bytes = int(cfg.num_params) * 2 // n_chips
     kv_bytes = _kv_bytes_per_chip(cfg, shape, n_chips)
-    eff = contended_tier_bandwidths(system, background)
+    eff = contended_tier_bandwidths(system, background, weight=flow_weight,
+                                    priority=flow_priority)
     if w_bytes + kv_bytes <= topo.tier(fast).capacity * 0.9:
         return {"weights": fast_kind, "kv": fast_kind or fast,
                 "kv_interleave": [1, 0], "kv_tiers": (fast, slow),
@@ -221,7 +236,10 @@ def _plan_kv_fabric(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
     adjusted = [_dc.replace(topo.tier(t), read_bw=logical[t],
                             write_bw=logical[t])
                 for t in (fast, slow)]
-    ws = optimal_interleave_weights(adjusted)
+    # A fully starved probe (every tier path owned by higher-priority
+    # background) has no bandwidth signal to split on — keep the fast tier.
+    ws = optimal_interleave_weights(adjusted) \
+        if any(logical[t] > 0 for t in (fast, slow)) else [1, 0]
     # Contention can drive the spill tier's share to zero (its effective
     # bandwidth is too small to be worth a page stripe) — that is a
     # fast-tier-only plan, not an interleave.

@@ -3,7 +3,8 @@
 Layers (bottom-up):
   topology   — device/memory/switch graph, typed links, latency routing
   systems    — presets for the paper's machines (Table 1)
-  contention — max-min fair sharing + multi-flow loaded latency
+  contention — QoS-aware max-min sharing (strict priority between classes,
+               weighted within one) + multi-flow loaded latency
   sim        — discrete-event fluid-flow transfer engine
   scenarios  — named interference experiments (noisy neighbor, ...)
 
@@ -18,7 +19,8 @@ from repro.fabric.contention import (Flow, effective_bandwidth,
 from repro.fabric.scenarios import (ALL_SCENARIOS, ScenarioResult,
                                     bidirectional_fight,
                                     noisy_neighbor_pool,
-                                    offload_vs_prefetch, run_scenario)
+                                    offload_vs_prefetch,
+                                    qos_prefetch_over_bulk, run_scenario)
 from repro.fabric.sim import FlowResult, makespan, simulate, \
     single_flow_time
 from repro.fabric.systems import SYSTEMS, System, cxl_pool, \
@@ -35,4 +37,5 @@ __all__ = [
     "FlowResult", "simulate", "makespan", "single_flow_time",
     "ScenarioResult", "run_scenario", "ALL_SCENARIOS",
     "noisy_neighbor_pool", "offload_vs_prefetch", "bidirectional_fight",
+    "qos_prefetch_over_bulk",
 ]

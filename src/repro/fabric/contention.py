@@ -2,12 +2,18 @@
 
 CXL-Interference's core observation: co-running traffic on a shared link
 degrades each flow super-linearly vs the naive 1/n split once latency is
-accounted for. The model here is two-layer:
+accounted for — and the degradation is *class-dependent*: latency-critical
+reads suffer disproportionately under bulk streams unless the link
+arbitrates. The model here is two-layer:
 
-  1. **Rates** — max-min fair sharing (progressive filling) over every
-     physical link a set of routed flows crosses. Full-duplex links give
-     each direction its own capacity; half-duplex links (DDR bus) pool both
-     directions, so a read and a write fight.
+  1. **Rates** — weighted max-min sharing (weighted water-filling) over
+     every physical link a set of routed flows crosses, with strict
+     priority between classes (DMA QoS): all capacity goes to the highest
+     ``Flow.priority`` present on a link first; each class then splits its
+     residual in proportion to ``Flow.weight``. Default weight=1/priority=0
+     degenerates to the egalitarian max-min of the original model.
+     Full-duplex links give each direction its own capacity; half-duplex
+     links (DDR bus) pool both directions, so a read and a write fight.
   2. **Latency** — ``loaded_latency_multi``: the M/M/1-shaped blow-up of
      ``costmodel.loaded_latency`` generalized to the *aggregate* utilization
      a flow's bottleneck link sees from all sharers.
@@ -26,13 +32,22 @@ _EPS = 1e-12
 
 @dataclasses.dataclass(frozen=True)
 class Flow:
-    """One transfer (or steady stream) between two fabric nodes."""
+    """One transfer (or steady stream) between two fabric nodes.
+
+    QoS class: ``priority`` arbitrates strictly (a higher-priority flow
+    takes everything it can use before lower classes see a byte — the DMA
+    engine's high-priority queue); ``weight`` splits bandwidth *within* a
+    priority class proportionally (weighted interleave of the DMA queues).
+    The defaults make every flow one egalitarian class.
+    """
     id: str
     src: str
     dst: str
     nbytes: int = 0              # 0 = open-ended stream (steady state)
     start: float = 0.0           # seconds (used by fabric.sim)
     demand: float = math.inf     # optional rate cap, bytes/s
+    weight: float = 1.0          # share within the priority class
+    priority: int = 0            # higher = served first (strict)
 
 
 def _routes(topo: FabricTopology,
@@ -42,15 +57,26 @@ def _routes(topo: FabricTopology,
 
 def max_min_rates(topo: FabricTopology, flows: Sequence[Flow],
                   routes: Optional[dict] = None) -> dict[str, float]:
-    """Max-min fair rate (bytes/s) per flow over the shared fabric.
+    """QoS-aware max-min fair rate (bytes/s) per flow over the fabric.
 
-    Progressive filling: every unfrozen flow's rate rises uniformly until a
-    link saturates; flows crossing it freeze at their fair share; repeat.
-    A flow whose route is empty (src == dst) gets infinite rate.
+    Strict priority between classes, weighted water-filling within one:
+    flows are grouped by ``Flow.priority`` (higher first); each class runs
+    weighted progressive filling — every unfrozen flow's rate rises in
+    proportion to its ``Flow.weight`` until a link's *residual* capacity
+    (what higher classes left behind) saturates or the flow hits its
+    demand cap; flows crossing a saturated link freeze; repeat. With the
+    default weight=1/priority=0 this is exactly egalitarian max-min.
+    A flow whose route is empty (src == dst) gets infinite rate; a flow
+    starved by higher-priority classes gets rate 0 (it waits, it does not
+    error).
     """
     ids = [f.id for f in flows]
     if len(set(ids)) != len(ids):
         raise ValueError(f"duplicate flow ids in {ids}")
+    for f in flows:
+        if not (f.weight > 0 and math.isfinite(f.weight)):
+            raise ValueError(f"flow {f.id!r} has weight {f.weight}; "
+                             "weights must be finite and > 0")
     routes = routes if routes is not None else _routes(topo, flows)
 
     capacity: dict[tuple, float] = {}
@@ -63,45 +89,55 @@ def max_min_rates(topo: FabricTopology, flows: Sequence[Flow],
 
     rates = {f.id: (math.inf if not routes[f.id] else 0.0) for f in flows}
     demand = {f.id: f.demand for f in flows}
-    unfrozen = {f.id for f in flows if routes[f.id]}
+    weight = {f.id: f.weight for f in flows}
 
-    while unfrozen:
-        # Max uniform increment before some shared link saturates or some
-        # flow hits its demand cap.
-        inc = math.inf
-        for pid, cap in capacity.items():
-            active = users[pid] & unfrozen
-            if active:
-                residual = cap - sum(rates[u] for u in users[pid])
-                inc = min(inc, max(0.0, residual) / len(active))
-        for fid in unfrozen:
-            inc = min(inc, demand[fid] - rates[fid])
-        if not math.isfinite(inc):      # no shared constraint at all
-            break
-        for fid in unfrozen:
-            rates[fid] += inc
-        newly_frozen = set()
-        for pid, cap in capacity.items():
-            if (users[pid] & unfrozen
-                    and cap - sum(rates[u] for u in users[pid])
-                    <= _EPS * cap):
-                newly_frozen |= users[pid] & unfrozen
-        for fid in unfrozen:
-            if rates[fid] >= demand[fid] - _EPS:
-                newly_frozen.add(fid)
-        if not newly_frozen:            # numerical guard; shouldn't happen
-            break
-        unfrozen -= newly_frozen
+    # Strict priority: fill the highest class first; every lower class sees
+    # only the residual capacity the classes above it left on each link.
+    for prio in sorted({f.priority for f in flows if routes[f.id]},
+                       reverse=True):
+        unfrozen = {f.id for f in flows
+                    if routes[f.id] and f.priority == prio}
+        while unfrozen:
+            # Max water-level increment (rate_f rises at weight_f per unit)
+            # before some shared link saturates or a flow hits its demand.
+            inc = math.inf
+            for pid, cap in capacity.items():
+                active = users[pid] & unfrozen
+                if active:
+                    residual = cap - sum(rates[u] for u in users[pid])
+                    wsum = sum(weight[u] for u in active)
+                    inc = min(inc, max(0.0, residual) / wsum)
+            for fid in unfrozen:
+                inc = min(inc, (demand[fid] - rates[fid]) / weight[fid])
+            if not math.isfinite(inc):      # no shared constraint at all
+                break
+            for fid in unfrozen:
+                rates[fid] += weight[fid] * inc
+            newly_frozen = set()
+            for pid, cap in capacity.items():
+                if (users[pid] & unfrozen
+                        and cap - sum(rates[u] for u in users[pid])
+                        <= _EPS * cap):
+                    newly_frozen |= users[pid] & unfrozen
+            for fid in unfrozen:
+                if rates[fid] >= demand[fid] - _EPS * max(1.0, weight[fid]):
+                    newly_frozen.add(fid)
+            if not newly_frozen:        # numerical guard; shouldn't happen
+                break
+            unfrozen -= newly_frozen
     return rates
 
 
 def effective_bandwidth(topo: FabricTopology, src: str, dst: str,
-                        background: Sequence[Flow] = ()) -> float:
+                        background: Sequence[Flow] = (), *,
+                        weight: float = 1.0, priority: int = 0) -> float:
     """Bandwidth a probe flow src->dst achieves alongside background flows.
 
-    With no background this is exactly ``topo.route_bandwidth(src, dst)``.
+    ``weight``/``priority`` are the probe's QoS class (default: egalitarian
+    best-effort). With no background this is exactly
+    ``topo.route_bandwidth(src, dst)`` regardless of class.
     """
-    probe = Flow("__probe__", src, dst)
+    probe = Flow("__probe__", src, dst, weight=weight, priority=priority)
     rates = max_min_rates(topo, [probe, *background])
     bw = rates["__probe__"]
     return topo.route_bandwidth(src, dst) if math.isinf(bw) else bw

@@ -69,6 +69,23 @@ def offload_vs_prefetch(offload_bytes: int = 512 * MiB,
     return run_scenario("offload_vs_prefetch", system, flows)
 
 
+def qos_prefetch_over_bulk(offload_bytes: int = 512 * MiB,
+                           prefetch_bytes: int = 64 * MiB,
+                           priority: int = 1,
+                           weight: float = 1.0) -> ScenarioResult:
+    """The DMA-QoS counterpart of ``offload_vs_prefetch``: the same two
+    flows on the same shared PCIe link, but the latency-critical KV
+    prefetch is issued in a higher-priority class (or a heavier weight) —
+    strict-priority arbitration shields it from the bulk stream (slowdown
+    ~1.0) while the offload absorbs the wait it used to inflict."""
+    system = get_system("tpu_v5e")
+    flows = [Flow("offload", "host_dram", "chip0", offload_bytes),
+             Flow("kv_prefetch", "host_dram", "chip0", prefetch_bytes,
+                  weight=weight, priority=priority)]
+    return run_scenario(f"qos_prefetch_over_bulk/p{priority}w{weight:g}",
+                        system, flows)
+
+
 def bidirectional_fight(nbytes: int = 256 * MiB) -> ScenarioResult:
     """Read+write fight on a half-duplex DDR bus vs peaceful coexistence on
     a full-duplex CXL link (the paper's directionality asymmetry): the DDR
@@ -84,5 +101,6 @@ def bidirectional_fight(nbytes: int = 256 * MiB) -> ScenarioResult:
 ALL_SCENARIOS = {
     "noisy_neighbor_pool": noisy_neighbor_pool,
     "offload_vs_prefetch": offload_vs_prefetch,
+    "qos_prefetch_over_bulk": qos_prefetch_over_bulk,
     "bidirectional_fight": bidirectional_fight,
 }

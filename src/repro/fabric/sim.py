@@ -1,13 +1,15 @@
 """Discrete-event transfer simulator over the fabric graph.
 
 Fluid-flow model: at any instant every active flow moves bytes at its
-max-min fair rate (repro.fabric.contention); events are flow arrivals and
-completions, and rates are recomputed at each event — the standard
-processor-sharing fluid approximation a full-system simulator like Cohet
-calibrates against hardware. A single uncontended flow therefore finishes in
-exactly ``nbytes / route_bandwidth + route_latency`` — the closed form
-``costmodel.transfer_time`` — while concurrent flows stretch each other out
-through shared links.
+QoS-aware max-min fair rate (repro.fabric.contention: strict priority
+between classes, weighted water-filling within one); events are flow
+arrivals and completions, and rates are recomputed at each event — the
+standard processor-sharing fluid approximation a full-system simulator like
+Cohet calibrates against hardware. A single uncontended flow therefore
+finishes in exactly ``nbytes / route_bandwidth + route_latency`` — the
+closed form ``costmodel.transfer_time`` — whatever its class, while
+concurrent flows stretch each other out through shared links according to
+their weights and priorities.
 """
 
 from __future__ import annotations
@@ -37,17 +39,51 @@ class FlowResult:
         return self.flow.nbytes / max(self.duration, 1e-18)
 
 
+def _validate(topo: FabricTopology, flows: Sequence[Flow]) -> dict:
+    """Up-front input validation naming the offending flow/link.
+
+    A flow that can *never* make progress (zero demand, a zero-bandwidth
+    link on its route) is a modeling error and must be rejected here; a
+    flow that is merely rate-starved by higher-priority classes is fine —
+    it waits in the event loop until capacity frees up.
+    """
+    ids = [f.id for f in flows]
+    if len(set(ids)) != len(ids):
+        dupes = sorted({i for i in ids if ids.count(i) > 1})
+        raise ValueError(f"duplicate flow ids {dupes}; the event engine "
+                         "keys state by flow id, so duplicates would "
+                         "silently merge")
+    routes = {}
+    for f in flows:
+        if f.nbytes <= 0:
+            raise ValueError(f"flow {f.id!r} needs nbytes > 0 to simulate "
+                             "(open-ended streams belong to the "
+                             "steady-state functions in contention.py)")
+        if f.demand <= 0:
+            raise ValueError(f"flow {f.id!r} has demand {f.demand}; a "
+                             "zero-demand flow can never finish — cap with "
+                             "a positive rate or drop the flow")
+        routes[f.id] = topo.route(f.src, f.dst)
+        for link in routes[f.id]:
+            if link.bandwidth <= 0:
+                raise ValueError(
+                    f"flow {f.id!r} routes over zero-bandwidth link "
+                    f"{link.src}->{link.dst} ({link.type.value}); it can "
+                    "never complete")
+    return routes
+
+
 def simulate(topo: FabricTopology,
              flows: Sequence[Flow]) -> list[FlowResult]:
     """Run all flows to completion; returns results in input order.
 
     Every flow needs ``nbytes > 0`` (open-ended streams belong to the
-    steady-state functions in contention.py, not the event engine).
+    steady-state functions in contention.py, not the event engine). Rates
+    honor QoS classes (``Flow.weight``/``Flow.priority``) at every event:
+    a flow starved by higher-priority traffic waits at rate 0 and resumes
+    the moment the class above it drains.
     """
-    for f in flows:
-        if f.nbytes <= 0:
-            raise ValueError(f"flow {f.id!r} needs nbytes > 0 to simulate")
-    routes = {f.id: topo.route(f.src, f.dst) for f in flows}
+    routes = _validate(topo, flows)
     lat = {f.id: sum(l.latency for l in routes[f.id]) for f in flows}
 
     pending = sorted(flows, key=lambda f: (f.start, f.id))
@@ -76,8 +112,13 @@ def simulate(topo: FabricTopology,
                      else math.inf for fid in active)
         t_next = min(next_arrival, t_done)
         if math.isinf(t_next):
-            raise RuntimeError("simulation stalled: zero-rate flows "
-                               f"{sorted(active)}")
+            # Unreachable after _validate: the highest-priority active
+            # class always makes progress on positive-bandwidth links.
+            starved = sorted(fid for fid in active if rates[fid] <= 0)
+            raise RuntimeError(
+                "simulation stalled: no active flow progresses and none "
+                f"arrive (zero-rate flows: {starved}); this is an engine "
+                "invariant violation — please report the topology/flows")
         dt = t_next - t
         for fid in list(active):
             if rates[fid] > 0:

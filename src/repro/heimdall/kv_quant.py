@@ -74,7 +74,10 @@ def kv_quant_prefetch_sim() -> list:
     rows = []
     totals = {}
     for label, c in caches.items():
-        plan = c.plan_prefetch(seqs, background=bg)
+        # priority pinned to 0: this family's premise is the *egalitarian*
+        # contended regime (the PR-2 baseline); the qos family measures
+        # what prioritized page fetches buy on top
+        plan = c.plan_prefetch(seqs, background=bg, priority=0)
         totals[label] = plan.total_time
         rows.append(Row(f"kv_quant_prefetch/{label}",
                         plan.total_time * 1e6,

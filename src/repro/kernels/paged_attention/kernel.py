@@ -56,7 +56,11 @@ def _flash_page_step(seq_lens, q, k, v, o_ref, m_ref, l_ref, acc_ref, *,
     m_prev = m_ref[:, :1]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)
+    # Mask p explicitly: when every position so far is invalid (a
+    # zero-length sequence whose block-table row is pure padding), m_new
+    # stays at NEG_INF and exp(s - m_new) would otherwise be exp(0)=1 —
+    # attending to whatever live page the padding aliases.
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
     l_ref[...] = jnp.broadcast_to(
         alpha * l_ref[:, :1] + jnp.sum(p, axis=1, keepdims=True),
         l_ref.shape)

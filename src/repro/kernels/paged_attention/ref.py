@@ -33,7 +33,13 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
                    k_seq.astype(jnp.float32)) * scale
     valid = jnp.arange(S)[None, :] < seq_lens[:, None]     # (B, S)
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    # masked softmax with a safe denominator: a zero-length sequence (all
+    # positions invalid — its padded block-table row may alias live pages)
+    # gets an all-zero row, not a uniform distribution over garbage
+    p = jnp.where(valid[:, None, None, :],
+                  jnp.exp(s - jnp.max(s, axis=-1, keepdims=True)), 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(denom == 0.0, 1.0, denom)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_seq.astype(jnp.float32))
     return out.reshape(B, Hq, d).astype(q.dtype)
 

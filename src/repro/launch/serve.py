@@ -95,7 +95,6 @@ class ServeEngine:
         jax.block_until_ready(tok)
         prefill_ms = (time.perf_counter() - t0) * 1e3
 
-        max_new = max(r.max_new for r in requests)
         outs = [[] for _ in requests]
         t0 = time.perf_counter()
         for s in range(max_new):
@@ -103,8 +102,10 @@ class ServeEngine:
             logits, cache = self._decode(params, cache, tok,
                                          jnp.int32(plen + s))
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # one device read for the whole batch, not B scalar reads
+            tok_host = np.asarray(tok)
             for i in range(B):
-                outs[i].append(int(tok[i, 0]))
+                outs[i].append(int(tok_host[i, 0]))
         jax.block_until_ready(tok)
         ms_per_tok = (time.perf_counter() - t0) * 1e3 / max_new
         return [Result(r.rid, outs[i][:r.max_new], prefill_ms, ms_per_tok)
@@ -159,15 +160,21 @@ class DecodeScheduler:
     arrived, so sequences whose pages live in HBM (or landed early) decode
     while the slow-tier fetches are still in flight. With the pager's int8
     cold tier (``PagerConfig(kv_dtype="int8")``) every ETA is ~2x sooner —
-    the bandwidth win turns directly into earlier admission.
+    the bandwidth win turns directly into earlier admission. Page fetches
+    ride the pager's DMA QoS class (high priority by default, overridable
+    via ``priority``/``weight``): under a bulk background stream the
+    prioritized ETAs — and with them every admission deadline — tighten
+    toward the uncontended schedule.
     """
 
     def __init__(self, cache, *, system=None, background: tuple = (),
-                 step_time: float = 500e-6):
+                 step_time: float = 500e-6, weight=None, priority=None):
         self.cache = cache
         self.system = system
         self.background = background
         self.step_time = float(step_time)
+        self.weight = weight          # None -> pager's configured QoS class
+        self.priority = priority
 
     def ready_times(self, seq_ids: list, plan) -> dict:
         """Sim time each sequence's host pages are fully resident."""
@@ -182,7 +189,9 @@ class DecodeScheduler:
         """Simulate ``n_steps`` decode steps per sequence, admitting each
         sequence at its pages' arrival (deadline-aware continuous batch)."""
         plan = self.cache.plan_prefetch(seq_ids, system=self.system,
-                                        background=self.background)
+                                        background=self.background,
+                                        weight=self.weight,
+                                        priority=self.priority)
         ready = self.ready_times(seq_ids, plan)
         remaining = {s: n_steps for s in seq_ids}
         admit: dict = {}
@@ -238,7 +247,8 @@ def simulate_paged_decode(*, requests: int = 8, prompt: int = 1024,
                           kv_heads: int = 8, head_dim: int = 128,
                           weights: tuple = (2, 1), system_name: str =
                           "tpu_v5e", step_us: float = 100.0,
-                          with_background: bool = True) -> dict:
+                          with_background: bool = True,
+                          prefetch_priority: int = 0) -> dict:
     """fp16-vs-int8 decode scheduling comparison on one page set.
 
     Builds two pagers with identical page placement — one bf16, one with
@@ -246,6 +256,10 @@ def simulate_paged_decode(*, requests: int = 8, prompt: int = 1024,
     the same decode run against the same background traffic. The report is
     the headline benchmark: bytes over the host link, simulated contended
     prefetch completion, and decode makespan.
+
+    ``prefetch_priority`` defaults to 0 (egalitarian): this report's
+    premise is the *contended* regime the kv_quant family baselined in
+    PR 2; raise it to see the DMA-QoS regime (the qos family's territory).
     """
     from repro.fabric.contention import Flow
     from repro.fabric.systems import get_system
@@ -266,7 +280,8 @@ def simulate_paged_decode(*, requests: int = 8, prompt: int = 1024,
     for label, cache in caches.items():
         seqs = list(range(requests))
         sched = DecodeScheduler(cache, system=system, background=bg,
-                                step_time=step_us * 1e-6)
+                                step_time=step_us * 1e-6,
+                                priority=prefetch_priority)
         ds = sched.schedule(seqs, gen)
         n_host = len(cache.host_pages(seqs))
         out[label] = {

@@ -18,6 +18,12 @@ link is compressed ~2x — the single highest-leverage optimization when the
 coherent link, not compute, bounds decode (the paper's through-line).
 ``attend_quant`` runs the fused int8 paged-attention kernel directly over
 quantized pools (in-register dequant, no fp copy materialized).
+
+DMA QoS (``PagerConfig.prefetch_priority``/``prefetch_weight``): page
+fetches are deadline-critical, so ``plan_prefetch`` issues them in a
+high-priority fabric class by default — on a shared PCIe/CXL link they ride
+over bulk best-effort streams (weight offload) instead of splitting the
+link 50/50 with them (``repro.fabric.contention`` strict-priority sharing).
 """
 
 from __future__ import annotations
@@ -43,11 +49,19 @@ class PagerConfig:
     weights: tuple = (1, 0)          # (hbm, host) interleave weights
     dtype: str = "bfloat16"
     kv_dtype: Optional[str] = None   # "int8" -> quantized host tier
+    # DMA QoS class of page fetches (fabric.contention.Flow semantics):
+    # deadline-critical page DMAs ride the high-priority queue over bulk
+    # best-effort streams (weight offload) by default.
+    prefetch_priority: int = 1
+    prefetch_weight: float = 1.0
 
     def __post_init__(self):
         if self.kv_dtype not in (None, "int8"):
             raise ValueError(f"kv_dtype must be None or 'int8', "
                              f"got {self.kv_dtype!r}")
+        if self.prefetch_weight <= 0:
+            raise ValueError(f"prefetch_weight must be > 0, "
+                             f"got {self.prefetch_weight}")
 
 
 class PagedKVCache:
@@ -79,6 +93,10 @@ class PagedKVCache:
         self.free = collections.deque(range(cfg.n_pages))
         self.tables: dict[int, list[int]] = {}    # seq id -> page ids
         self.lens: dict[int, int] = {}
+        # host shadow is only valid after spill_cold_pages populated it;
+        # fetching before any spill would overwrite live HBM pages with the
+        # zero-initialized shadow (silent KV corruption)
+        self._spilled = False
         # block_table/seq_lens cache, keyed by the seq-id tuple; one decode
         # step calls attend once per layer, so rebuilding the padded numpy
         # table per call is pure overhead — invalidated on any table change
@@ -128,6 +146,9 @@ class PagedKVCache:
         self.lens[seq_id] = start + T
         self._bt_cache.clear()
         self._quant_pools = None
+        # the HBM pool is the live copy again; any host shadow is stale —
+        # a fetch_spilled without a fresh spill must not clobber this write
+        self._spilled = False
 
     # -- reads ---------------------------------------------------------------
     def block_table(self, seq_ids: list[int]) -> tuple:
@@ -137,7 +158,9 @@ class PagedKVCache:
         hit = self._bt_cache.get(key)
         if hit is not None:
             return hit
-        mx = max(len(self.tables[s]) for s in seq_ids)
+        # at least one page column so an all-fresh batch still yields a
+        # valid (B, 1) table; padded entries are masked by seq_lens==0
+        mx = max(1, max(len(self.tables[s]) for s in seq_ids))
         bt = np.zeros((len(seq_ids), mx), np.int32)
         for i, s in enumerate(seq_ids):
             pages = self.tables[s]
@@ -201,13 +224,21 @@ class PagedKVCache:
         else:
             self.k_pool_host = place(k_cold, "host")
             self.v_pool_host = place(v_cold, "host")
+        self._spilled = True
         return int(self._host_mask.sum())
 
     def fetch_spilled(self) -> None:
         """Bring spilled pages back next to the HBM pool (sync fetch — the
         paper-faithful mode; overlap belongs to the serving loop). int8
-        pages cross the link compressed and dequantize on the HBM side."""
-        if not self._host_mask.any():
+        pages cross the link compressed and dequantize on the HBM side.
+
+        No-op until ``spill_cold_pages`` has actually populated the host
+        shadow: a spurious fetch must not overwrite live HBM pages with the
+        zero-initialized shadow. The shadow is consumed by the fetch — it
+        goes stale the moment the live pool is appended to, so a fresh
+        spill is required before the next fetch.
+        """
+        if not self._spilled or not self._host_mask.any():
             return
         mask = jnp.asarray(self._host_mask)
         if self.cfg.kv_dtype == "int8":
@@ -224,6 +255,7 @@ class PagedKVCache:
         self.k_pool = jnp.where(mask[:, None, None, None], k_h, self.k_pool)
         self.v_pool = jnp.where(mask[:, None, None, None], v_h, self.v_pool)
         self._quant_pools = None
+        self._spilled = False
 
     @property
     def occupancy(self) -> float:
@@ -263,7 +295,9 @@ class PagedKVCache:
         return pages
 
     def plan_prefetch(self, seq_ids: list[int], system=None,
-                      background: tuple = ()) -> "PrefetchPlan":
+                      background: tuple = (),
+                      weight: Optional[float] = None,
+                      priority: Optional[int] = None) -> "PrefetchPlan":
         """Schedule host->HBM page prefetches through the fabric simulator.
 
         Pages are fetched one at a time over the host link (one DMA queue),
@@ -273,9 +307,19 @@ class PagedKVCache:
         which pages will be resident by the time the step needs them.
         Quantized pages (kv_dtype="int8") move ~2x fewer bytes, so their
         ETAs land ~2x sooner on a bandwidth-bound link.
+
+        Page fetches are issued in the pager's DMA QoS class
+        (``PagerConfig.prefetch_priority``/``prefetch_weight``, overridable
+        here): at the default priority 1 they ride over best-effort bulk
+        streams instead of splitting the link with them, which is the
+        class-aware arbitration CXL-Interference shows a shared link needs.
         """
-        return plan_prefetch(self.host_pages(seq_ids), self.host_page_bytes,
-                             system=system, background=background)
+        return plan_prefetch(
+            self.host_pages(seq_ids), self.host_page_bytes,
+            system=system, background=background,
+            weight=self.cfg.prefetch_weight if weight is None else weight,
+            priority=(self.cfg.prefetch_priority if priority is None
+                      else priority))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -292,12 +336,16 @@ class PrefetchPlan:
 
 
 def plan_prefetch(pages: list, page_bytes: int, system=None,
-                  background: tuple = ()) -> PrefetchPlan:
+                  background: tuple = (), weight: float = 1.0,
+                  priority: int = 0) -> PrefetchPlan:
     """Build a PrefetchPlan by simulating chained page flows on the fabric.
 
     ``system`` defaults to the TPU v5e preset (host_dram -> chip0 over
     PCIe). ``background`` flows (repro.fabric.Flow, tier- or node-named
     endpoints) contend with the prefetch stream for shared links.
+    ``weight``/``priority`` are the page flows' DMA QoS class (default:
+    egalitarian best-effort; ``PagedKVCache.plan_prefetch`` raises it to
+    the pager's deadline-critical class).
     """
     from repro.fabric.contention import Flow, effective_bandwidth
     from repro.fabric.sim import simulate
@@ -307,15 +355,17 @@ def plan_prefetch(pages: list, page_bytes: int, system=None,
     src = system.tier_node("host")
     dst = system.compute
     bg = system.resolve_flows(background)
-    eff = effective_bandwidth(system.fabric, src, dst, bg)
+    eff = effective_bandwidth(system.fabric, src, dst, bg,
+                              weight=weight, priority=priority)
     if not pages:
         return PrefetchPlan((), {}, 0.0, eff)
     # One in-flight fetch at a time (a single DMA queue): stagger each page
     # flow behind the previous one's contended estimate, then let the sim
     # resolve the actual ETAs against the background traffic.
     lat = system.fabric.route_latency(src, dst)
-    est = page_bytes / eff + lat
-    flows = [Flow(f"page{p}", src, dst, page_bytes, start=i * est)
+    est = page_bytes / eff + lat if eff > 0 else lat
+    flows = [Flow(f"page{p}", src, dst, page_bytes, start=i * est,
+                  weight=weight, priority=priority)
              for i, p in enumerate(pages)]
     bg_sized = [f if f.nbytes > 0
                 else dataclasses.replace(f, nbytes=page_bytes * len(pages))

@@ -73,6 +73,113 @@ def test_tiered_pages_spill_roundtrip():
     np.testing.assert_allclose(np.asarray(c.k_pool), before)
 
 
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+def test_fetch_spilled_before_spill_is_noop(kv_dtype):
+    """Regression: a spurious fetch_spilled (no spill_cold_pages yet) used
+    to overwrite the live HBM pool's host-tier pages with the
+    zero-initialized host shadow — silent KV corruption. It must be a
+    no-op: pools and attend output identical before/after."""
+    rng = np.random.default_rng(11)
+    c = PagedKVCache(_cfg(weights=(2, 1), kv_dtype=kv_dtype))
+    assert (c.tier_of_page == 1).any()         # some pages ARE host-tier
+    c.allocate(0)
+    kv = jnp.asarray(rng.normal(size=(24, 2, 16)), jnp.float32)
+    c.append(0, kv, kv * 0.5)
+    q = jnp.asarray(rng.normal(size=(1, 4, 16)), jnp.float32)
+    k_before = np.asarray(c.k_pool).copy()
+    v_before = np.asarray(c.v_pool).copy()
+    out_before = np.asarray(c.attend(q, [0]))
+    c.fetch_spilled()                          # spurious: nothing spilled
+    np.testing.assert_array_equal(np.asarray(c.k_pool), k_before)
+    np.testing.assert_array_equal(np.asarray(c.v_pool), v_before)
+    np.testing.assert_array_equal(np.asarray(c.attend(q, [0])), out_before)
+    # and the real spill/fetch roundtrip still works afterwards
+    assert c.spill_cold_pages() > 0
+    c.fetch_spilled()
+    if kv_dtype is None:                       # int8 roundtrip is lossy
+        np.testing.assert_allclose(np.asarray(c.k_pool), k_before,
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_fetch_spilled_consumes_the_spill():
+    """The host shadow is consumed by a fetch: fetching twice without a
+    fresh spill must not rewrite the pool (the shadow may be stale)."""
+    c = PagedKVCache(_cfg(weights=(2, 1)))
+    c.allocate(0)
+    k = jnp.ones((16, 2, 16), jnp.float32)
+    c.append(0, k, k)                          # pages 0,1 (both hbm-tier)
+    c.spill_cold_pages()                       # shadow: host pages all zero
+    c.fetch_spilled()
+    c.append(0, 2 * k, 2 * k)                  # page 2 (host-tier) holds 2s
+    assert c.tier_of_page[2] == 1
+    c.fetch_spilled()                          # stale shadow: must no-op
+    np.testing.assert_array_equal(np.asarray(c.k_pool)[2],
+                                  np.full((8, 2, 16), 2.0, np.float32))
+
+
+def test_append_after_spill_invalidates_shadow():
+    """spill -> append -> fetch must not clobber the freshly appended
+    host-tier pages with the pre-append shadow: append makes the HBM pool
+    the live copy again, so the spill is no longer fetchable."""
+    c = PagedKVCache(_cfg(weights=(2, 1)))
+    c.allocate(0)
+    k = jnp.ones((16, 2, 16), jnp.float32)
+    c.append(0, k, k)                          # pages 0,1 (both hbm-tier)
+    c.spill_cold_pages()                       # shadow holds zeros @ page 2
+    c.append(0, 2 * k, 2 * k)                  # page 2 (host-tier) holds 2s
+    assert c.tier_of_page[2] == 1
+    c.fetch_spilled()                          # stale shadow: must no-op
+    np.testing.assert_array_equal(np.asarray(c.k_pool)[2],
+                                  np.full((8, 2, 16), 2.0, np.float32))
+
+
+def test_zero_length_sequence_fully_masked():
+    """A freshly allocated (zero-length) sequence's block-table row is pure
+    padding with page id 0 — which aliases a live page of another sequence.
+    Both kernels must mask it to a finite all-zero output."""
+    from repro.kernels.paged_attention import (paged_attention,
+                                               paged_attention_quant)
+    from repro.kernels.quant import quantize_pages
+    rng = np.random.default_rng(3)
+    c = PagedKVCache(_cfg())
+    c.allocate(0)
+    kv = jnp.asarray(rng.normal(size=(20, 2, 16)), jnp.float32)
+    c.append(0, kv, kv)                        # seq 0 owns page 0
+    c.allocate(1)                              # zero-length: no pages
+    bt, lens = c.block_table([0, 1])
+    assert int(lens[1]) == 0
+    assert np.all(np.asarray(bt)[1] == 0)      # aliases seq 0's first page
+    q = jnp.asarray(rng.normal(size=(2, 4, 16)), jnp.float32)
+
+    out = np.asarray(c.attend(q, [0, 1]))
+    assert np.isfinite(out).all()
+    np.testing.assert_array_equal(out[1], np.zeros_like(out[1]))
+    # the live sequence is untouched by the padded neighbor
+    from repro.kernels.paged_attention import paged_attention_ref
+    ref = np.asarray(paged_attention_ref(q, c.k_pool, c.v_pool, bt, lens))
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    kq, ks = quantize_pages(c.k_pool)
+    vq, vs = quantize_pages(c.v_pool)
+    out_q = np.asarray(paged_attention_quant(q, kq, vq, ks, vs, bt, lens))
+    assert np.isfinite(out_q).all()
+    np.testing.assert_array_equal(out_q[1], np.zeros_like(out_q[1]))
+
+
+def test_all_zero_length_batch_attends_to_zeros():
+    """Even a batch of only fresh sequences (empty tables everywhere) gets
+    a valid (B, 1) block table and an all-zero finite output."""
+    c = PagedKVCache(_cfg())
+    c.allocate(0)
+    c.allocate(1)
+    bt, lens = c.block_table([0, 1])
+    assert bt.shape == (2, 1) and int(lens.sum()) == 0
+    q = jnp.ones((2, 4, 16), jnp.float32)
+    out = np.asarray(c.attend(q, [0, 1]))
+    assert np.isfinite(out).all()
+    np.testing.assert_array_equal(out, np.zeros_like(out))
+
+
 def test_batched_append_matches_per_token():
     """One batched scatter == the per-token append loop (hot-path rewrite
     parity), across page boundaries and multiple appends."""

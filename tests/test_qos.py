@@ -1,0 +1,303 @@
+"""DMA QoS: weighted/priority bandwidth sharing end-to-end.
+
+Covers the ISSUE acceptance criteria: weighted water-filling and strict
+priority in ``max_min_rates``, starved-flow wait (not stall) plus named
+input validation in ``fabric.sim``, QoS threading through cost model /
+placement / pager / DecodeScheduler, the uncontended closed-form anchor
+under any class, and the BENCH_qos.json thresholds.
+"""
+
+import math
+
+import pytest
+
+from repro.config.base import ShapeConfig, get_config
+from repro.core.costmodel import contended_transfer_time, transfer_time
+from repro.core.placement import plan_kv_placement
+from repro.fabric import (FabricTopology, Flow, LinkType,
+                          effective_bandwidth, get_system, makespan,
+                          max_min_rates, offload_vs_prefetch,
+                          qos_prefetch_over_bulk, simulate,
+                          single_flow_time)
+from repro.serving.pager import plan_prefetch
+
+MiB = 1 << 20
+HOST_BW = 8e9                    # tpu_v5e chip<->host PCIe per chip
+
+
+# -- weighted max-min -------------------------------------------------------
+
+def test_weighted_split_proportional():
+    """Within one class, a shared link splits in proportion to weights."""
+    s = get_system("tpu_v5e")
+    rates = max_min_rates(s.fabric, [
+        Flow("a", "host_dram", "chip0", weight=4.0),
+        Flow("b", "host_dram", "chip0")])
+    assert rates["a"] == pytest.approx(4 * rates["b"], rel=1e-6)
+    assert rates["a"] + rates["b"] == pytest.approx(HOST_BW, rel=1e-6)
+
+
+def test_default_class_degenerates_to_egalitarian():
+    s = get_system("tpu_v5e")
+    flows = [Flow(f"f{i}", "host_dram", "chip0") for i in range(4)]
+    rates = max_min_rates(s.fabric, flows)
+    for fid in rates:
+        assert rates[fid] == pytest.approx(HOST_BW / 4, rel=1e-6)
+
+
+def test_weighted_respects_demand_cap():
+    """A heavy flow capped below its weighted share leaves the rest to the
+    light flow (water-filling continues past frozen flows)."""
+    s = get_system("tpu_v5e")
+    rates = max_min_rates(s.fabric, [
+        Flow("heavy", "host_dram", "chip0", weight=8.0, demand=1e9),
+        Flow("light", "host_dram", "chip0")])
+    assert rates["heavy"] == pytest.approx(1e9, rel=1e-6)
+    assert rates["light"] == pytest.approx(HOST_BW - 1e9, rel=1e-3)
+
+
+def test_weight_must_be_positive():
+    s = get_system("tpu_v5e")
+    for w in (0.0, -1.0, math.inf):
+        with pytest.raises(ValueError, match="weight"):
+            max_min_rates(s.fabric, [Flow("f", "host_dram", "chip0",
+                                          weight=w)])
+
+
+# -- strict priority --------------------------------------------------------
+
+def test_strict_priority_preempts_link():
+    """The high class takes the whole link; the low class is starved to
+    rate 0 (it waits — the sim resumes it when the class above drains)."""
+    s = get_system("tpu_v5e")
+    rates = max_min_rates(s.fabric, [
+        Flow("hi", "host_dram", "chip0", priority=1),
+        Flow("lo", "host_dram", "chip0")])
+    assert rates["hi"] == pytest.approx(HOST_BW, rel=1e-6)
+    assert rates["lo"] == 0.0
+
+
+def test_priority_then_weighted_within_class():
+    s = get_system("tpu_v5e")
+    rates = max_min_rates(s.fabric, [
+        Flow("hi_a", "host_dram", "chip0", priority=1, weight=2.0),
+        Flow("hi_b", "host_dram", "chip0", priority=1),
+        Flow("lo", "host_dram", "chip0")])
+    assert rates["hi_a"] == pytest.approx(2 * rates["hi_b"], rel=1e-6)
+    assert rates["hi_a"] + rates["hi_b"] == pytest.approx(HOST_BW, rel=1e-6)
+    assert rates["lo"] == 0.0
+
+
+def test_capped_high_class_leaves_residual_to_low():
+    """Strict priority is work-conserving: what the high class cannot use
+    (demand cap) flows down to the next class."""
+    s = get_system("tpu_v5e")
+    rates = max_min_rates(s.fabric, [
+        Flow("hi", "host_dram", "chip0", priority=1, demand=2e9),
+        Flow("lo", "host_dram", "chip0")])
+    assert rates["hi"] == pytest.approx(2e9, rel=1e-6)
+    assert rates["lo"] == pytest.approx(HOST_BW - 2e9, rel=1e-3)
+
+
+def test_priority_on_disjoint_links_is_irrelevant():
+    """QoS only arbitrates *shared* links; flows on disjoint routes keep
+    their full bandwidth whatever their class."""
+    s = get_system("tpu_v5e")
+    rates = max_min_rates(s.fabric, [
+        Flow("hbm_read", "hbm0", "chip0", priority=5),
+        Flow("host_read", "host_dram", "chip0")])
+    assert rates["host_read"] == pytest.approx(HOST_BW, rel=1e-6)
+
+
+# -- sim: starved flows wait; bad inputs are named up front ------------------
+
+def test_starved_flow_waits_then_completes():
+    """A low-priority flow makes zero progress while the high class drains,
+    then takes the whole link — total time is back-to-back, no stall."""
+    s = get_system("tpu_v5e")
+    nbytes = 8 * MiB
+    res = simulate(s.fabric, [
+        Flow("hi", "host_dram", "chip0", nbytes, priority=1),
+        Flow("lo", "host_dram", "chip0", nbytes)])
+    hi = next(r for r in res if r.flow.id == "hi")
+    lo = next(r for r in res if r.flow.id == "lo")
+    lat = s.fabric.route_latency("host_dram", "chip0")
+    assert hi.duration == pytest.approx(nbytes / HOST_BW + lat, rel=1e-6)
+    # lo waited for hi's bytes, then ran uncontended
+    assert lo.duration == pytest.approx(2 * nbytes / HOST_BW + lat,
+                                        rel=1e-6)
+    assert makespan(res) == lo.finish
+
+
+def test_sim_rejects_duplicate_flow_ids():
+    """The event engine keys state by flow id; duplicates would silently
+    merge (bytes of the first arrival discarded), so they are rejected."""
+    s = get_system("tpu_v5e")
+    with pytest.raises(ValueError, match=r"duplicate.*'x'"):
+        simulate(s.fabric, [
+            Flow("x", "host_dram", "chip0", 1 * MiB),
+            Flow("x", "host_dram", "chip0", 1 * MiB, start=1e-3)])
+
+
+def test_sim_rejects_zero_demand_naming_flow():
+    s = get_system("tpu_v5e")
+    with pytest.raises(ValueError, match=r"'bulk'.*demand"):
+        simulate(s.fabric, [Flow("bulk", "host_dram", "chip0", 1 * MiB,
+                                 demand=0.0)])
+
+
+def test_sim_rejects_zero_bandwidth_link_naming_both():
+    f = FabricTopology("broken")
+    f.add_node("c", "compute")
+    f.add_node("m", "memory")
+    f.add_link("c", "m", LinkType.PCIE, 0.0, 1e-6)
+    with pytest.raises(ValueError) as ei:
+        simulate(f, [Flow("doomed", "m", "c", 1 * MiB)])
+    assert "doomed" in str(ei.value) and "m->c" in str(ei.value)
+
+
+def test_sim_single_classed_flow_matches_closed_form_exactly():
+    """Acceptance: the QoS-enabled simulator still reproduces the
+    uncontended single-flow closed form exactly, whatever the class."""
+    s = get_system("tpu_v5e")
+    nbytes = 64 * MiB
+    cf = single_flow_time(s.fabric, "host_dram", "chip0", nbytes)
+    for kw in ({}, {"weight": 3.0}, {"priority": 2},
+               {"weight": 0.5, "priority": 7}):
+        r = simulate(s.fabric, [Flow("f", "host_dram", "chip0", nbytes,
+                                     **kw)])[0]
+        assert r.duration == pytest.approx(cf, rel=1e-12), kw
+
+
+# -- cost model / placement -------------------------------------------------
+
+def test_effective_bandwidth_classed_probe():
+    s = get_system("tpu_v5e")
+    bg = [Flow("bulk", "host_dram", "chip0")]
+    assert effective_bandwidth(s.fabric, "host_dram", "chip0", bg) \
+        == pytest.approx(HOST_BW / 2, rel=1e-6)
+    assert effective_bandwidth(s.fabric, "host_dram", "chip0", bg,
+                               priority=1) \
+        == pytest.approx(HOST_BW, rel=1e-6)
+    assert effective_bandwidth(s.fabric, "host_dram", "chip0", bg,
+                               weight=3.0) \
+        == pytest.approx(HOST_BW * 0.75, rel=1e-6)
+
+
+def test_contended_transfer_time_priority_rides_over_bulk():
+    s = get_system("tpu_v5e")
+    solo = transfer_time(64 * MiB, s, "host", "hbm")
+    bg = [Flow("bulk", "host", "hbm")]
+    assert contended_transfer_time(64 * MiB, s, "host", "hbm", bg) \
+        == pytest.approx(2 * solo, rel=0.05)
+    assert contended_transfer_time(64 * MiB, s, "host", "hbm", bg,
+                                   priority=1) \
+        == pytest.approx(solo, rel=1e-6)
+    # a starved transfer never completes in steady state
+    starved = contended_transfer_time(
+        64 * MiB, s, "host", "hbm",
+        [Flow("bulk", "host", "hbm", priority=9)])
+    assert math.isinf(starved)
+
+
+def test_plan_kv_placement_qos_recovers_interleave():
+    """A noisy neighbor shifts the interleave — unless the KV traffic
+    outranks it, in which case the plan returns to the quiet-link split."""
+    cfg = get_config("qwen2-72b")
+    shape = ShapeConfig("big_decode", 32768, 512, "decode")
+    s = get_system("dual_socket_cxl")
+    noise = (Flow("noise", "cxl", "socket0"),)
+    base = plan_kv_placement(cfg, shape, 1, system=s)
+    noisy = plan_kv_placement(cfg, shape, 1, system=s, background=noise)
+    shielded = plan_kv_placement(cfg, shape, 1, system=s, background=noise,
+                                 flow_priority=1)
+    assert noisy["kv_interleave"] != base["kv_interleave"]
+    assert shielded["kv_interleave"] == base["kv_interleave"]
+    assert shielded["effective_bw"]["cxl"] \
+        == pytest.approx(base["effective_bw"]["cxl"], rel=1e-6)
+
+
+# -- pager / scheduler ------------------------------------------------------
+
+def test_plan_prefetch_priority_beats_egalitarian():
+    """Acceptance: prioritized prefetch lands its last page >=1.3x sooner
+    than egalitarian sharing under the same bulk background flow."""
+    pages = list(range(16))
+    bg = (Flow("bulk", "host", "hbm", nbytes=256 * MiB),)
+    ega = plan_prefetch(pages, page_bytes=1 * MiB, background=bg)
+    pri = plan_prefetch(pages, page_bytes=1 * MiB, background=bg,
+                        priority=1)
+    assert ega.total_time / pri.total_time >= 1.3
+    assert pri.effective_bw > ega.effective_bw
+    # uncontended, class is irrelevant: same plan either way
+    solo = plan_prefetch(pages, page_bytes=1 * MiB)
+    solo_pri = plan_prefetch(pages, page_bytes=1 * MiB, priority=1)
+    assert solo_pri.total_time == pytest.approx(solo.total_time, rel=1e-9)
+
+
+def test_pager_prefetch_uses_configured_class():
+    """PagedKVCache issues page fetches in its configured high-priority
+    class by default; forcing priority 0 restores the egalitarian split."""
+    import jax.numpy as jnp
+    from repro.serving.pager import PagedKVCache, PagerConfig
+
+    # bandwidth-bound pages (0.5 MiB each) so the class split, not route
+    # latency, dominates the ETAs
+    c = PagedKVCache(PagerConfig(page_size=64, n_pages=32, kv_heads=8,
+                                 head_dim=128, weights=(2, 1),
+                                 dtype="float32"))
+    assert c.cfg.prefetch_priority == 1
+    c.allocate(0)
+    kv = jnp.ones((256, 8, 128), jnp.float32)
+    c.append(0, kv, kv)
+    bg = (Flow("bulk", "host", "hbm", nbytes=256 * MiB),)
+    pri = c.plan_prefetch([0], background=bg)
+    ega = c.plan_prefetch([0], background=bg, priority=0)
+    quiet = c.plan_prefetch([0])
+    assert pri.total_time == pytest.approx(quiet.total_time, rel=1e-9)
+    assert ega.total_time > 1.3 * pri.total_time
+
+
+def test_decode_scheduler_qos_tightens_admission():
+    import jax.numpy as jnp
+    from repro.launch.serve import DecodeScheduler
+    from repro.serving.pager import PagedKVCache, PagerConfig
+
+    c = PagedKVCache(PagerConfig(page_size=8, n_pages=64, kv_heads=2,
+                                 head_dim=16, weights=(2, 1),
+                                 dtype="float32"))
+    kv = jnp.ones((40, 2, 16), jnp.float32)
+    seqs = [0, 1, 2]
+    for s in seqs:
+        c.allocate(s)
+        c.append(s, kv, kv)
+    bg = (Flow("bulk", "host", "hbm", nbytes=256 * MiB),)
+    ega = DecodeScheduler(c, background=bg, step_time=5e-6,
+                          priority=0).schedule(seqs, 8)
+    pri = DecodeScheduler(c, background=bg,
+                          step_time=5e-6).schedule(seqs, 8)
+    assert min(pri.admit_time.values()) < min(ega.admit_time.values())
+    assert pri.mean_completion < ega.mean_completion
+    assert pri.prefetch_total < ega.prefetch_total
+
+
+# -- scenarios / benchmark summary ------------------------------------------
+
+def test_qos_scenario_shields_prefetch():
+    ega = offload_vs_prefetch()
+    pri = qos_prefetch_over_bulk()
+    assert ega.slowdown["kv_prefetch"] == pytest.approx(2.0, rel=0.05)
+    assert pri.slowdown["kv_prefetch"] == pytest.approx(1.0, rel=1e-6)
+    # work conservation: the bulk stream still finishes when it would have
+    assert pri.result("offload").finish \
+        == pytest.approx(ega.result("offload").finish, rel=1e-6)
+
+
+def test_qos_summary_thresholds():
+    from repro.heimdall.qos import qos_summary
+    d = qos_summary()
+    assert d["eta_improvement"] >= 1.3
+    assert d["weighted_eta_improvement"] > 1.0
+    assert d["single_flow_anchor"]["rel_err"] < 1e-9
+    etas = d["last_page_eta_s"]
+    assert etas["prioritized"] < etas["weighted_w4"] < etas["egalitarian"]
