@@ -2,23 +2,27 @@
 
 Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §6 for the
 paper-figure -> benchmark index). Run: PYTHONPATH=src python -m benchmarks.run
-[--only substring] [--skip-apps] [--families micro,kv_quant,qos]
-[--json-out BENCH_kv_quant.json]
+[--only substring] [--skip-apps] [--families micro,kv_quant,qos,calibration]
+[--json-out BENCH_kv_quant.json] [--json-out-dir .]
 
 ``--json-out`` writes the JSON summary of the selected summarizable family
-(kv_quant or qos); select exactly one of them when using it.
+(kv_quant, qos, or calibration); select exactly one of them when using it.
+``--json-out-dir`` writes ``BENCH_<family>.json`` into the directory for
+*every* summarizable family selected.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import traceback
 
 
 def _families():
     from repro.heimdall.apps import ALL_APPS
+    from repro.heimdall.calibration import ALL_CALIBRATION
     from repro.heimdall.interference import ALL_INTERFERENCE
     from repro.heimdall.kv_quant import ALL_KV_QUANT
     from repro.heimdall.micro import ALL_MICRO
@@ -27,6 +31,7 @@ def _families():
             "interference": list(ALL_INTERFERENCE),
             "kv_quant": list(ALL_KV_QUANT),
             "qos": list(ALL_QOS),
+            "calibration": list(ALL_CALIBRATION),
             "apps": list(ALL_APPS)}
 
 
@@ -38,10 +43,13 @@ def _summary_fn(family: str):
     if family == "qos":
         from repro.heimdall.qos import qos_summary
         return qos_summary
+    if family == "calibration":
+        from repro.heimdall.calibration import calibration_summary
+        return calibration_summary
     return None
 
 
-SUMMARIZABLE = ("kv_quant", "qos")
+SUMMARIZABLE = ("kv_quant", "qos", "calibration")
 
 
 def main() -> None:
@@ -50,15 +58,20 @@ def main() -> None:
                     help="run benchmarks whose name contains this")
     ap.add_argument("--families", default=None,
                     help="comma-separated families to run "
-                         "(micro,interference,kv_quant,qos,apps); default: "
-                         "all minus --skip-* flags")
+                         "(micro,interference,kv_quant,qos,calibration,"
+                         "apps); default: all minus --skip-* flags")
     ap.add_argument("--json-out", default=None,
                     help="write the selected summarizable family's JSON "
-                         "summary (kv_quant or qos) to this path")
+                         "summary (one of: %s) to this path"
+                         % ",".join(SUMMARIZABLE))
+    ap.add_argument("--json-out-dir", default=None,
+                    help="write BENCH_<family>.json into this directory "
+                         "for every summarizable family selected")
     ap.add_argument("--skip-apps", action="store_true")
     ap.add_argument("--skip-interference", action="store_true")
     ap.add_argument("--skip-kv-quant", action="store_true")
     ap.add_argument("--skip-qos", action="store_true")
+    ap.add_argument("--skip-calibration", action="store_true")
     args = ap.parse_args()
 
     fams = _families()
@@ -74,13 +87,20 @@ def main() -> None:
                    + ([] if args.skip_interference else fams["interference"])
                    + ([] if args.skip_kv_quant else fams["kv_quant"])
                    + ([] if args.skip_qos else fams["qos"])
+                   + ([] if args.skip_calibration else fams["calibration"])
                    + ([] if args.skip_apps else fams["apps"]))
         selected_summaries = [
             f for f, skipped in (("kv_quant", args.skip_kv_quant),
-                                 ("qos", args.skip_qos)) if not skipped]
+                                 ("qos", args.skip_qos),
+                                 ("calibration", args.skip_calibration))
+            if not skipped]
     if args.json_out and len(selected_summaries) != 1:
         sys.exit("--json-out writes one family's JSON summary; select "
-                 f"exactly one of {SUMMARIZABLE} (got {selected_summaries})")
+                 f"exactly one of {SUMMARIZABLE} (got {selected_summaries}) "
+                 "or use --json-out-dir for several")
+    if args.json_out_dir and not selected_summaries:
+        sys.exit("--json-out-dir needs at least one summarizable family "
+                 f"selected (one of {SUMMARIZABLE})")
     print("name,us_per_call,derived")
     failures = 0
     for bench in benches:
@@ -99,6 +119,13 @@ def main() -> None:
         with open(args.json_out, "w") as f:
             json.dump(summary, f, indent=2)
         print(f"wrote {args.json_out}", file=sys.stderr)
+    if args.json_out_dir:
+        os.makedirs(args.json_out_dir, exist_ok=True)
+        for fam in selected_summaries:
+            path = os.path.join(args.json_out_dir, f"BENCH_{fam}.json")
+            with open(path, "w") as f:
+                json.dump(_summary_fn(fam)(), f, indent=2)
+            print(f"wrote {path}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

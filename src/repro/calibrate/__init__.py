@@ -1,0 +1,41 @@
+"""Hardware calibration: fit fabric link constants from measurements.
+
+Closes the measure->explain loop between ``repro.heimdall`` (measurement)
+and ``repro.fabric`` (model):
+
+  runner    — CalibrationRunner: probe each route at several transfer
+              sizes (real jax timings where the tier is addressable, a
+              deterministic ground-truth emulation elsewhere), with the
+              dispersion-based noise guard (rerun unstable samples)
+  fit       — robust weighted least-squares fitter: per-route
+              LinkEstimate (bandwidth, latency, efficiency vs nominal)
+  profile   — versioned CalibrationProfile JSON artifact (machine
+              metadata, sample provenance, tolerant/validating loader)
+  validate  — Cohet-style accountability: replay interference/qos
+              scenarios through fabric.sim on the calibrated constants
+              and report predicted-vs-measured relative error
+
+Calibrated constants flow to every planner through
+``fabric.systems.from_profile(profile)`` -> ``TierTopology.from_fabric``:
+costmodel, placement, and the KV pager all plan on fitted numbers.
+"""
+
+from repro.calibrate.fit import (DEFAULT_MAX_DISPERSION, fit_profile,
+                                 fit_route, sample_weight)
+from repro.calibrate.profile import (PROFILE_VERSION, CalibrationProfile,
+                                     LinkEstimate, LinkSample, ProfileError,
+                                     machine_metadata)
+from repro.calibrate.runner import (CalibrationRunner, TruthConfig,
+                                    ground_truth_system)
+from repro.calibrate.validate import (REPLAY_SCENARIOS, FlowError,
+                                      ScenarioValidation, ValidationReport,
+                                      validate_samples, validate_scenarios)
+
+__all__ = [
+    "CalibrationProfile", "LinkEstimate", "LinkSample", "ProfileError",
+    "PROFILE_VERSION", "machine_metadata",
+    "fit_profile", "fit_route", "sample_weight", "DEFAULT_MAX_DISPERSION",
+    "CalibrationRunner", "TruthConfig", "ground_truth_system",
+    "validate_scenarios", "validate_samples", "ValidationReport",
+    "ScenarioValidation", "FlowError", "REPLAY_SCENARIOS",
+]

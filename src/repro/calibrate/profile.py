@@ -1,0 +1,215 @@
+"""Versioned calibration artifacts: samples, link estimates, profiles.
+
+A ``CalibrationProfile`` is the serialized output of the measure->fit loop:
+per-route ``LinkEstimate``s (fitted bandwidth/latency plus the efficiency
+factor vs. the nominal preset), the raw ``LinkSample`` provenance they were
+fitted from, and machine metadata — the artifact ``fabric.systems.
+from_profile`` turns back into a calibrated ``System`` and ``validate``
+holds the simulator accountable to.
+
+The JSON schema is versioned (``PROFILE_VERSION``). Loading tolerates
+unknown fields (forward compatibility: a newer writer may add keys) but
+rejects missing/mistyped known fields with a ``ProfileError`` naming the
+offending field — a malformed artifact must fail loudly at load time, not
+as a nonsense simulation three layers up.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import platform
+from typing import Optional
+
+PROFILE_VERSION = 1
+
+
+class ProfileError(ValueError):
+    """A calibration artifact failed validation; the message names the
+    offending field (e.g. ``links[2].bandwidth``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSample:
+    """One measured transfer: ``nbytes`` moved src->dst in ``seconds``.
+
+    ``src``/``dst`` are fabric node names of the measured route's endpoints
+    (memory node -> reference compute, the read direction HEIMDALL probes).
+    ``dispersion`` is the timing's IQR/median (``harness.Timing``): the
+    fitter down-weights unstable samples instead of fitting noise.
+    ``source`` records provenance: ``"jax"`` (wall-clock on this backend)
+    or ``"emulated"`` (the deterministic ground-truth machine used when the
+    hardware tier is not addressable from this container).
+    """
+    system: str
+    src: str
+    dst: str
+    link_type: str               # bottleneck link type on the nominal route
+    nbytes: int
+    seconds: float
+    dispersion: float
+    source: str = "emulated"
+    reruns: int = 0              # times the noise guard re-measured this
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkEstimate:
+    """Fitted constants of one measured route (memory node -> compute).
+
+    ``bandwidth``/``latency`` are the robust fit of ``seconds ~= nbytes/bw
+    + lat`` over that route's samples; ``efficiency`` and ``latency_ratio``
+    are the fit relative to the nominal preset route (the numbers
+    ``from_profile`` rescales preset links by). ``rel_residual`` is the
+    weighted relative RMS residual of the fit — the fit-quality number the
+    calibration benchmark family thresholds.
+    """
+    src: str
+    dst: str
+    link_type: str
+    bandwidth: float             # bytes/s, fitted
+    latency: float               # seconds, fitted
+    efficiency: float            # fitted bw / nominal route bw
+    latency_ratio: float         # fitted lat / nominal route lat
+    n_samples: int
+    n_downweighted: int          # unstable or outlier samples de-emphasized
+    rel_residual: float
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationProfile:
+    """The measure->fit artifact one ``CalibrationRunner`` pass produces."""
+    system: str                  # preset the measurements were taken against
+    links: tuple                 # tuple[LinkEstimate]
+    samples: tuple = ()          # tuple[LinkSample] provenance
+    source: str = "emulated"     # "jax" | "emulated" | "mixed"
+    machine: dict = dataclasses.field(default_factory=dict)
+    version: int = PROFILE_VERSION
+
+    def estimate(self, src: str, dst: str) -> LinkEstimate:
+        for est in self.links:
+            if est.src == src and est.dst == dst:
+                return est
+        raise KeyError(f"no estimate for route {src}->{dst} in profile "
+                       f"({self.system}); have "
+                       f"{[(e.src, e.dst) for e in self.links]}")
+
+    def tier_measurements(self, system=None) -> dict:
+        """Per-tier measurement dict for ``TierTopology.from_calibration``
+        — the round-trip bridge: the same fitted route constants expressed
+        in tier vocabulary (read/write bw = fitted route bandwidth, latency
+        = fitted route latency, capacity/kind from the fabric node)."""
+        from repro.fabric.systems import get_system
+        system = system or get_system(self.system)
+        out = {}
+        for tier, node in system.tier_map.items():
+            if node == system.compute:
+                continue
+            try:
+                est = self.estimate(node, system.compute)
+            except KeyError:
+                continue
+            n = system.fabric.node(node)
+            out[tier] = dict(capacity=n.capacity, read_bw=est.bandwidth,
+                             write_bw=est.bandwidth, latency=est.latency,
+                             memory_kind=n.memory_kind)
+        return out
+
+    # -- serialization -------------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "version": self.version,
+            "system": self.system,
+            "source": self.source,
+            "machine": dict(self.machine),
+            "links": [dataclasses.asdict(e) for e in self.links],
+            "samples": [dataclasses.asdict(s) for s in self.samples],
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2)
+
+    @classmethod
+    def from_json(cls, data: dict) -> "CalibrationProfile":
+        if not isinstance(data, dict):
+            raise ProfileError(f"profile: expected object, got "
+                               f"{type(data).__name__}")
+        version = _field(data, "version", int, "")
+        if version > PROFILE_VERSION:
+            raise ProfileError(
+                f"version: profile version {version} is newer than this "
+                f"reader ({PROFILE_VERSION}); refusing to misread it")
+        links = _field(data, "links", list, "")
+        samples = data.get("samples", [])
+        if not isinstance(samples, list):
+            raise ProfileError("samples: expected array, got "
+                               f"{type(samples).__name__}")
+        return cls(
+            system=_field(data, "system", str, ""),
+            source=str(data.get("source", "emulated")),
+            machine=dict(data.get("machine") or {}),
+            links=tuple(_load_record(LinkEstimate, e, f"links[{i}]")
+                        for i, e in enumerate(links)),
+            samples=tuple(_load_record(LinkSample, s, f"samples[{i}]")
+                          for i, s in enumerate(samples)),
+            version=version,
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationProfile":
+        with open(path) as f:
+            try:
+                data = json.load(f)
+            except json.JSONDecodeError as e:
+                raise ProfileError(f"{path}: not valid JSON ({e})") from None
+        return cls.from_json(data)
+
+
+def _field(data: dict, key: str, typ, ctx: str):
+    """Required typed field; ProfileError names ``ctx.key`` on failure."""
+    name = f"{ctx}.{key}" if ctx else key
+    if key not in data:
+        raise ProfileError(f"{name}: missing required field")
+    val = data[key]
+    if typ is float and isinstance(val, int) and not isinstance(val, bool):
+        val = float(val)
+    if not isinstance(val, typ) or isinstance(val, bool) and typ is not bool:
+        raise ProfileError(f"{name}: expected {typ.__name__}, got "
+                           f"{type(val).__name__} ({val!r})")
+    return val
+
+
+def _load_record(cls, data: dict, ctx: str):
+    """Build a frozen record from JSON: required fields checked and typed,
+    optional fields defaulted, unknown fields tolerated (and dropped)."""
+    if not isinstance(data, dict):
+        raise ProfileError(f"{ctx}: expected object, got "
+                           f"{type(data).__name__}")
+    kwargs = {}
+    for f in dataclasses.fields(cls):
+        typ = {"str": str, "int": int, "float": float}.get(f.type, object)
+        has_default = (f.default is not dataclasses.MISSING
+                       or f.default_factory is not dataclasses.MISSING)
+        if f.name not in data:
+            if has_default:
+                continue
+            raise ProfileError(f"{ctx}.{f.name}: missing required field")
+        kwargs[f.name] = (_field(data, f.name, typ, ctx)
+                          if typ is not object else data[f.name])
+    return cls(**kwargs)
+
+
+def machine_metadata() -> dict:
+    """Provenance metadata stamped into profiles (platform + backend)."""
+    meta = {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+    }
+    try:
+        import jax
+        meta["jax"] = jax.__version__
+        meta["backend"] = jax.default_backend()
+    except Exception:       # noqa: BLE001 — metadata is best-effort
+        pass
+    return meta

@@ -95,11 +95,15 @@ class TierTopology:
         """Build a topology from HEIMDALL measurement output
         ({tier: {capacity, read_bw, write_bw, latency, memory_kind}}).
 
-        Calibration measures tiers, not links, so links are derived: a
-        transfer between two tiers is limited by the slower endpoint
-        (min of read bandwidths) and pays the farther endpoint's latency —
-        the conservative bound until a fabric preset supplies real routes
-        (see ``from_fabric``)."""
+        Calibration measures tiers (compute->tier routes), not tier-to-tier
+        links, so links are derived from the hub model: a transfer between
+        two tiers stages through the compute endpoint, so it is limited by
+        the slower route (min of read bandwidths) and pays *both* routes'
+        latencies (their sum). This matches ``from_fabric``'s routed
+        derivation whenever the fabric's tier-to-tier route actually passes
+        through the reference compute node (every preset link except
+        shortcut links like tpu_v5e's direct host->pool hop, where
+        ``from_fabric``'s real route is faster)."""
         tiers = {k: MemoryTier(k, **v) for k, v in measurements.items()}
         links = {}
         names = sorted(tiers)
@@ -107,7 +111,7 @@ class TierTopology:
             for b in names[i + 1:]:
                 links[(a, b)] = Link(a, b,
                                      min(tiers[a].read_bw, tiers[b].read_bw),
-                                     max(tiers[a].latency, tiers[b].latency))
+                                     tiers[a].latency + tiers[b].latency)
         return cls(tiers=tiers, links=links)
 
     @classmethod

@@ -24,14 +24,14 @@ from repro.fabric.scenarios import (ALL_SCENARIOS, ScenarioResult,
 from repro.fabric.sim import FlowResult, makespan, simulate, \
     single_flow_time
 from repro.fabric.systems import SYSTEMS, System, cxl_pool, \
-    dual_socket_cxl, get_system, gh200, mi300a, tpu_v5e
+    dual_socket_cxl, from_profile, get_system, gh200, mi300a, tpu_v5e
 from repro.fabric.topology import (FabricLink, FabricNode, FabricTopology,
                                    LinkType, NodeKind)
 
 __all__ = [
     "FabricLink", "FabricNode", "FabricTopology", "LinkType", "NodeKind",
-    "SYSTEMS", "System", "get_system", "dual_socket_cxl", "cxl_pool",
-    "gh200", "mi300a", "tpu_v5e",
+    "SYSTEMS", "System", "get_system", "from_profile", "dual_socket_cxl",
+    "cxl_pool", "gh200", "mi300a", "tpu_v5e",
     "Flow", "max_min_rates", "effective_bandwidth", "loaded_latency_multi",
     "route_loaded_latency",
     "FlowResult", "simulate", "makespan", "single_flow_time",

@@ -108,6 +108,35 @@ class FabricTopology:
             if b not in self._adj[a]:
                 self._adj[a].append(b)
 
+    def rescaled(self, scales: dict, name: Optional[str] = None
+                 ) -> "FabricTopology":
+        """New topology with per-link multiplicative scales applied.
+
+        ``scales`` maps an *undirected* pair key ``(min(a,b), max(a,b))``
+        to ``(bandwidth_factor, latency_factor)``; unlisted links keep
+        their constants. Both directions of a physical link scale together
+        (presets install symmetric constants; calibration measures the
+        read direction and applies it to the pair). This is the primitive
+        ``systems.from_profile`` rebuilds calibrated machines with.
+        """
+        out = FabricTopology(name or self.name)
+        for n in self.nodes.values():
+            out.add_node(n.name, n.kind, n.capacity, n.memory_kind)
+        seen: set[tuple] = set()
+        for (a, b), link in self.links.items():
+            key = (min(a, b), max(a, b))
+            if key in seen:
+                continue
+            seen.add(key)
+            bw_f, lat_f = scales.get(key, (1.0, 1.0))
+            if bw_f <= 0 or lat_f < 0:
+                raise ValueError(f"bad scale {scales[key]} for link {key}: "
+                                 "bandwidth factor must be > 0 and latency "
+                                 "factor >= 0")
+            out.add_link(a, b, link.type, link.bandwidth * bw_f,
+                         link.latency * lat_f, duplex=link.duplex)
+        return out
+
     # -- queries ------------------------------------------------------------
     def node(self, name: str) -> FabricNode:
         if name not in self.nodes:

@@ -29,9 +29,31 @@ class Row:
         return f"{self.name},{self.us_per_call:.3f},{self.derived}"
 
 
-def time_fn(fn: Callable, *args, warmup: int = 3, iters: int = 10,
-            inner: int = 1) -> float:
-    """Median wall-time per call in seconds."""
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """One timed measurement with its noise signature.
+
+    ``dispersion`` (IQR/median) is the noise guard the calibration fitter
+    keys on: a sample whose repetitions scatter widely carries little
+    information about the link constant and gets down-weighted (or rerun)
+    instead of silently fitted.
+    """
+    median: float                # seconds per call
+    iqr: float                   # interquartile range of the repetitions
+    times: tuple                 # raw per-iteration seconds
+
+    @property
+    def dispersion(self) -> float:
+        """IQR/median — scale-free instability measure (0 = perfectly
+        repeatable; >~0.1 means the median is dominated by scheduler or
+        allocator noise)."""
+        return self.iqr / self.median if self.median > 0 else float("inf")
+
+
+def time_fn_stats(fn: Callable, *args, warmup: int = 3, iters: int = 10,
+                  inner: int = 1) -> Timing:
+    """Like ``time_fn`` but returns the full ``Timing`` (median + IQR
+    dispersion) so callers can judge measurement stability."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -42,7 +64,20 @@ def time_fn(fn: Callable, *args, warmup: int = 3, iters: int = 10,
             out = fn(*args)
         jax.block_until_ready(out)
         times.append((time.perf_counter() - t0) / inner)
-    return statistics.median(times)
+    med = statistics.median(times)
+    if len(times) >= 2:
+        q = statistics.quantiles(times, n=4, method="inclusive")
+        iqr = q[2] - q[0]
+    else:
+        iqr = 0.0
+    return Timing(med, iqr, tuple(times))
+
+
+def time_fn(fn: Callable, *args, warmup: int = 3, iters: int = 10,
+            inner: int = 1) -> float:
+    """Median wall-time per call in seconds."""
+    return time_fn_stats(fn, *args, warmup=warmup, iters=iters,
+                         inner=inner).median
 
 
 @functools.cache

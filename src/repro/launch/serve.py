@@ -248,7 +248,8 @@ def simulate_paged_decode(*, requests: int = 8, prompt: int = 1024,
                           weights: tuple = (2, 1), system_name: str =
                           "tpu_v5e", step_us: float = 100.0,
                           with_background: bool = True,
-                          prefetch_priority: int = 0) -> dict:
+                          prefetch_priority: int = 0,
+                          calibration_profile=None) -> dict:
     """fp16-vs-int8 decode scheduling comparison on one page set.
 
     Builds two pagers with identical page placement — one bf16, one with
@@ -260,11 +261,24 @@ def simulate_paged_decode(*, requests: int = 8, prompt: int = 1024,
     ``prefetch_priority`` defaults to 0 (egalitarian): this report's
     premise is the *contended* regime the kv_quant family baselined in
     PR 2; raise it to see the DMA-QoS regime (the qos family's territory).
+
+    ``calibration_profile`` (a ``repro.calibrate.CalibrationProfile`` or a
+    path to its JSON artifact) swaps the nominal preset for the calibrated
+    machine — every ETA and admission deadline then rests on *fitted* link
+    constants instead of datasheet numbers (the serve half of the
+    run -> fit -> validate -> serve loop).
     """
     from repro.fabric.contention import Flow
-    from repro.fabric.systems import get_system
+    from repro.fabric.systems import from_profile, get_system
 
-    system = get_system(system_name)
+    if calibration_profile is not None:
+        from repro.calibrate import CalibrationProfile
+        if isinstance(calibration_profile, str):
+            calibration_profile = CalibrationProfile.load(
+                calibration_profile)
+        system = from_profile(calibration_profile, preset=system_name)
+    else:
+        system = get_system(system_name)
     # fixed-size background stream: both the fp16 and int8 runs must see
     # IDENTICAL contention (an open-ended flow would be auto-sized from
     # each cache's own page bytes, quietly shrinking the int8 background)
@@ -273,7 +287,8 @@ def simulate_paged_decode(*, requests: int = 8, prompt: int = 1024,
     toks = prompt + gen
     out = {"system": system_name, "requests": requests,
            "tokens_per_seq": toks, "step_us": step_us,
-           "background": bool(with_background)}
+           "background": bool(with_background),
+           "calibrated": calibration_profile is not None}
     caches = paired_kv_caches(requests=requests, tokens=toks,
                               page_size=page_size, kv_heads=kv_heads,
                               head_dim=head_dim, weights=weights)
@@ -318,12 +333,16 @@ def main():
                          "report (no model run)")
     ap.add_argument("--system", default="tpu_v5e")
     ap.add_argument("--step-us", type=float, default=100.0)
+    ap.add_argument("--calibration-profile", default=None,
+                    help="path to a CalibrationProfile JSON; the paged-sim "
+                         "then plans on fitted link constants")
     args = ap.parse_args()
 
     if args.paged_sim:
         print(json.dumps(simulate_paged_decode(
             requests=args.requests, gen=args.gen,
-            system_name=args.system, step_us=args.step_us), indent=2))
+            system_name=args.system, step_us=args.step_us,
+            calibration_profile=args.calibration_profile), indent=2))
         return
 
     cfg = get_config(args.arch)

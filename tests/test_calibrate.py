@@ -1,0 +1,331 @@
+"""repro.calibrate: measure->fit->validate loop + profile serialization."""
+
+import json
+import math
+
+import pytest
+
+from repro.calibrate import (CalibrationProfile, CalibrationRunner,
+                             LinkSample, ProfileError, TruthConfig,
+                             fit_profile, fit_route, ground_truth_system,
+                             sample_weight, validate_samples,
+                             validate_scenarios)
+from repro.core.tiers import TierTopology
+from repro.fabric.systems import from_profile, get_system
+
+MiB = 1 << 20
+
+TRUTH = TruthConfig(efficiency={"pcie": 0.8, "cxl": 0.75, "ddr": 0.9},
+                    default_efficiency=0.85, latency_scale=1.3,
+                    noise=0.02, seed=7)
+
+
+@pytest.fixture(scope="module")
+def tpu_runner():
+    return CalibrationRunner("tpu_v5e", source="emulated", truth=TRUTH)
+
+
+@pytest.fixture(scope="module")
+def tpu_profile(tpu_runner):
+    return tpu_runner.calibrate()
+
+
+def _synthetic_samples(bw=10e9, lat=5e-6, sizes=(64 << 10, 1 * MiB,
+                                                 16 * MiB, 64 * MiB),
+                       dispersion=0.01, system="tpu_v5e",
+                       src="host_dram", dst="chip0"):
+    return [LinkSample(system=system, src=src, dst=dst, link_type="pcie",
+                       nbytes=n, seconds=n / bw + lat,
+                       dispersion=dispersion)
+            for n in sizes for _ in range(3)]
+
+
+# -- fitter ------------------------------------------------------------------
+
+def test_fit_recovers_known_constants_exactly():
+    """Noise-free synthetic truth: the fitter must recover the line."""
+    est = fit_route(_synthetic_samples(bw=10e9, lat=5e-6),
+                    nominal_bandwidth=12e9, nominal_latency=4e-6)
+    assert est.bandwidth == pytest.approx(10e9, rel=1e-6)
+    assert est.latency == pytest.approx(5e-6, rel=1e-6)
+    assert est.efficiency == pytest.approx(10e9 / 12e9, rel=1e-6)
+    assert est.rel_residual < 1e-9
+
+
+def test_fit_recovers_truth_within_tolerance(tpu_runner, tpu_profile):
+    """Synthetic-truth acceptance: hidden constants recovered under 2%
+    noise — bandwidth within 3%, latency within 10%."""
+    fab = tpu_runner.truth_system.fabric
+    assert len(tpu_profile.links) == 4       # hbm, host, peer_hbm, pool
+    for est in tpu_profile.links:
+        tb = fab.route_bandwidth(est.src, est.dst)
+        tl = fab.route_latency(est.src, est.dst)
+        assert est.bandwidth == pytest.approx(tb, rel=0.03), est.src
+        assert est.latency == pytest.approx(tl, rel=0.10), est.src
+        assert est.rel_residual < 0.05
+
+
+def test_fitter_downweights_unstable_samples():
+    """A wildly unstable sample (huge dispersion) must not drag the fit —
+    the noise guard's down-weighting, not silent fitting."""
+    good = _synthetic_samples(bw=10e9, lat=5e-6)
+    bad = LinkSample(system="tpu_v5e", src="host_dram", dst="chip0",
+                     link_type="pcie", nbytes=64 * MiB,
+                     seconds=10 * (64 * MiB / 10e9), dispersion=5.0)
+    est = fit_route(good + [bad], nominal_bandwidth=10e9,
+                    nominal_latency=5e-6)
+    assert est.bandwidth == pytest.approx(10e9, rel=0.01)
+    assert est.n_downweighted >= 1
+
+
+def test_fitter_trims_residual_outliers():
+    """A single wild measurement with *clean* dispersion is caught by the
+    residual-trim pass instead — and once trimmed, it must not inflate
+    the reported fit-quality residual nor miscount n_downweighted."""
+    good = _synthetic_samples(bw=10e9, lat=5e-6)
+    bad = LinkSample(system="tpu_v5e", src="host_dram", dst="chip0",
+                     link_type="pcie", nbytes=64 * MiB,
+                     seconds=20 * (64 * MiB / 10e9), dispersion=0.01)
+    est = fit_route(good + [bad], nominal_bandwidth=10e9,
+                    nominal_latency=5e-6)
+    assert est.bandwidth == pytest.approx(10e9, rel=0.02)
+    assert est.rel_residual < 1e-6        # residual over fitted samples only
+    assert est.n_downweighted == 1        # the outlier, nothing else
+    # near-perfect fit: float-rounding scatter is not "trimmed"
+    clean = fit_route(good, nominal_bandwidth=10e9, nominal_latency=5e-6)
+    assert clean.n_downweighted == 0
+
+
+def test_sample_weight_rolloff():
+    assert sample_weight(0.0) == 1.0
+    assert sample_weight(0.1) == pytest.approx(0.5)
+    assert sample_weight(1.0) < 0.01
+    assert sample_weight(math.inf) == 0.0
+
+
+def test_fit_route_rejects_mixed_routes():
+    s1 = _synthetic_samples()[:2]
+    s2 = _synthetic_samples(src="pool_mem")[:1]
+    with pytest.raises(ValueError, match="mixed routes"):
+        fit_route(s1 + s2, nominal_bandwidth=1e9, nominal_latency=1e-6)
+
+
+# -- runner ------------------------------------------------------------------
+
+def test_runner_reruns_unstable_samples():
+    """With huge injected noise the guard must re-measure (reruns > 0)."""
+    noisy = TruthConfig(noise=0.5, seed=3)
+    r = CalibrationRunner("tpu_v5e", source="emulated", truth=noisy,
+                          sizes=(1 * MiB,), repeats=4, max_dispersion=0.1,
+                          max_reruns=2)
+    samples = r.run()
+    assert any(s.reruns > 0 for s in samples)
+    # quiet machine: nothing to rerun
+    quiet = CalibrationRunner("tpu_v5e", source="emulated",
+                              truth=TruthConfig(noise=0.001, seed=3),
+                              sizes=(1 * MiB,), repeats=4)
+    assert all(s.reruns == 0 for s in quiet.run())
+
+
+def test_runner_covers_all_tiers(tpu_runner):
+    samples = tpu_runner.run()
+    srcs = {s.src for s in samples}
+    assert srcs == {"hbm0", "hbm1", "host_dram", "pool_mem"}
+    assert all(s.dst == "chip0" for s in samples)
+    assert all(s.dispersion >= 0 for s in samples)
+
+
+def test_ground_truth_system_scales_links():
+    truth = ground_truth_system("tpu_v5e", TRUTH)
+    nominal = get_system("tpu_v5e")
+    t = truth.fabric.link("chip0", "host_dram")
+    n = nominal.fabric.link("chip0", "host_dram")
+    assert t.bandwidth == pytest.approx(0.8 * n.bandwidth)
+    assert t.latency == pytest.approx(1.3 * n.latency)
+
+
+# -- profile serialization ---------------------------------------------------
+
+def test_profile_json_roundtrip(tpu_profile, tmp_path):
+    path = tmp_path / "profile.json"
+    tpu_profile.save(str(path))
+    loaded = CalibrationProfile.load(str(path))
+    assert loaded.version == tpu_profile.version
+    assert loaded.system == "tpu_v5e"
+    assert loaded.links == tpu_profile.links
+    assert loaded.samples == tpu_profile.samples
+    assert loaded.source == "emulated"
+    assert loaded.machine == tpu_profile.machine
+
+
+def test_profile_tolerates_unknown_fields(tpu_profile):
+    data = tpu_profile.to_json()
+    data["future_field"] = {"x": 1}
+    data["links"][0]["another_new_thing"] = 42
+    loaded = CalibrationProfile.from_json(data)
+    assert loaded.links == tpu_profile.links
+
+
+def test_profile_rejects_newer_version(tpu_profile):
+    data = tpu_profile.to_json()
+    data["version"] = 999
+    with pytest.raises(ProfileError, match="version"):
+        CalibrationProfile.from_json(data)
+
+
+def test_malformed_profile_names_the_field(tpu_profile):
+    data = tpu_profile.to_json()
+    del data["links"][2]["bandwidth"]
+    with pytest.raises(ProfileError, match=r"links\[2\].bandwidth"):
+        CalibrationProfile.from_json(data)
+    data = tpu_profile.to_json()
+    data["links"][1]["latency"] = "fast"
+    with pytest.raises(ProfileError, match=r"links\[1\].latency"):
+        CalibrationProfile.from_json(data)
+    with pytest.raises(ProfileError, match="system"):
+        CalibrationProfile.from_json({"version": 1, "links": []})
+
+
+def test_profile_load_rejects_bad_json(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text("{not json")
+    with pytest.raises(ProfileError, match="not valid JSON"):
+        CalibrationProfile.load(str(p))
+
+
+# -- from_profile / round-trip consistency -----------------------------------
+
+def test_from_profile_rescales_preset_links(tpu_profile, tpu_runner):
+    cal = from_profile(tpu_profile)
+    truth = tpu_runner.truth_system.fabric
+    nominal = get_system("tpu_v5e").fabric
+    link = cal.fabric.link("chip0", "host_dram")
+    assert link.bandwidth == pytest.approx(
+        truth.link("chip0", "host_dram").bandwidth, rel=0.03)
+    assert link.bandwidth < nominal.link("chip0", "host_dram").bandwidth
+    # unmeasured sibling PCIe link takes the measured type's scale so
+    # routing cannot escape the calibration through it
+    sib = cal.fabric.link("chip1", "host_dram")
+    assert sib.bandwidth == pytest.approx(link.bandwidth, rel=1e-6)
+
+
+def test_from_profile_mismatched_preset_raises(tpu_profile):
+    with pytest.raises(ValueError, match="no route"):
+        from_profile(tpu_profile, preset="gh200")
+
+
+def test_roundtrip_from_calibration_vs_from_fabric():
+    """Satellite: both derivation paths must agree on link bw/latency for
+    the same measurements (dual_socket_cxl: every tier-to-tier route
+    stages through the compute hub, so the hub model is exact)."""
+    r = CalibrationRunner("dual_socket_cxl", source="emulated", truth=TRUTH)
+    profile = r.calibrate()
+    t_cal = TierTopology.from_calibration(profile.tier_measurements())
+    t_fab = TierTopology.from_fabric(from_profile(profile))
+    assert set(t_cal.tiers) == set(t_fab.tiers)
+    for (a, b) in t_cal.links:
+        assert t_cal.link_bw(a, b) == pytest.approx(
+            t_fab.link_bw(a, b), rel=1e-6), (a, b)
+        assert t_cal.link_latency(a, b) == pytest.approx(
+            t_fab.link_latency(a, b), rel=1e-6), (a, b)
+    for name in t_cal.tiers:
+        assert t_cal.tier(name).read_bw == pytest.approx(
+            t_fab.tier(name).read_bw, rel=1e-6)
+        assert t_cal.tier(name).latency == pytest.approx(
+            t_fab.tier(name).latency, rel=1e-6)
+
+
+def test_roundtrip_shortcut_routes_are_faster(tpu_profile):
+    """tpu_v5e's direct host->pool hop: the fabric's real route may beat
+    the hub-model bound, never lose to it (up to fit-noise jitter)."""
+    t_cal = TierTopology.from_calibration(tpu_profile.tier_measurements())
+    t_fab = TierTopology.from_fabric(from_profile(tpu_profile))
+    for (a, b) in t_cal.links:
+        assert t_fab.link_latency(a, b) <= t_cal.link_latency(a, b) * 1.01
+        assert t_fab.link_bw(a, b) >= t_cal.link_bw(a, b) * 0.99
+    # the shortcut itself: direct host->pool hop skips the host tier's
+    # route latency entirely
+    assert t_fab.link_latency("host", "pool") \
+        < 0.8 * t_cal.link_latency("host", "pool")
+
+
+# -- validation --------------------------------------------------------------
+
+def test_validate_scenarios_calibration_beats_nominal(tpu_runner,
+                                                      tpu_profile):
+    rep = validate_scenarios(tpu_profile, tpu_runner.truth_system)
+    assert rep.system == "tpu_v5e"
+    assert rep.max_rel_err < 0.05
+    assert rep.nominal_max_rel_err > 0.10       # datasheet constants miss
+    assert rep.error_reduction > 3.0
+    names = {s.name for s in rep.scenarios}
+    assert any(n.startswith("interference/") for n in names)
+    assert any(n.startswith("qos/") for n in names)
+    j = rep.to_json()
+    assert j["max_rel_err"] == rep.max_rel_err
+    assert set(j["scenarios"]) == names
+
+
+def test_validate_samples_closed_form_replay(tpu_profile):
+    out = validate_samples(tpu_profile)
+    assert out["n_samples"] == len(tpu_profile.samples)
+    assert out["max_rel_err"] < 0.15            # bounded by timing noise
+    assert out["mean_rel_err"] < 0.05
+
+
+def test_validate_unknown_system_raises(tpu_profile):
+    with pytest.raises(ValueError, match="no replay scenarios"):
+        validate_scenarios(tpu_profile, get_system("tpu_v5e"),
+                           preset="not_a_preset")
+    with pytest.raises(ValueError, match="no replay scenarios"):
+        validate_scenarios(tpu_profile, get_system("tpu_v5e"),
+                           scenarios={})
+
+
+# -- planners on calibrated constants ----------------------------------------
+
+def test_planners_pick_up_calibrated_constants(tpu_profile):
+    """TierTopology.from_fabric + pager prefetch plan on fitted numbers:
+    a slower-than-datasheet host link means later ETAs."""
+    from repro.serving.pager import plan_prefetch
+    cal = from_profile(tpu_profile)
+    nominal = get_system("tpu_v5e")
+    topo = TierTopology.from_fabric(cal)
+    assert topo.tier("host").read_bw < \
+        TierTopology.from_fabric(nominal).tier("host").read_bw
+    p_cal = plan_prefetch([0, 1, 2], page_bytes=1 * MiB, system=cal)
+    p_nom = plan_prefetch([0, 1, 2], page_bytes=1 * MiB, system=nominal)
+    assert p_cal.total_time > p_nom.total_time
+    assert p_cal.effective_bw < p_nom.effective_bw
+
+
+def test_simulate_paged_decode_with_profile(tpu_profile, tmp_path):
+    from repro.launch.serve import simulate_paged_decode
+    path = tmp_path / "prof.json"
+    tpu_profile.save(str(path))
+    cal = simulate_paged_decode(requests=2, prompt=256, gen=4,
+                                calibration_profile=str(path))
+    nom = simulate_paged_decode(requests=2, prompt=256, gen=4)
+    assert cal["calibrated"] and not nom["calibrated"]
+    # fitted (slower) host link -> prefetches take longer than datasheet
+    assert cal["fp16"]["prefetch_total_s"] > nom["fp16"]["prefetch_total_s"]
+
+
+# -- harness noise guard -----------------------------------------------------
+
+def test_time_fn_stats_dispersion():
+    from repro.heimdall.harness import Timing, time_fn_stats
+    ticks = iter(range(100))
+    t = time_fn_stats(lambda: next(ticks), warmup=1, iters=8)
+    assert isinstance(t, Timing)
+    assert t.median > 0 and len(t.times) == 8
+    assert t.iqr >= 0 and math.isfinite(t.dispersion)
+    assert Timing(0.0, 1.0, ()).dispersion == math.inf
+    assert Timing(2.0, 0.5, ()).dispersion == 0.25
+
+
+def test_fit_profile_rejects_multi_system_samples():
+    s1 = _synthetic_samples(system="tpu_v5e")[:2]
+    s2 = _synthetic_samples(system="gh200", src="lpddr", dst="hopper")[:2]
+    with pytest.raises(ValueError, match="multiple systems"):
+        fit_profile(s1 + s2)
