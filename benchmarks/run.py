@@ -2,13 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV (see DESIGN.md §6 for the
 paper-figure -> benchmark index). Run: PYTHONPATH=src python -m benchmarks.run
-[--only substring] [--skip-apps] [--families micro,kv_quant,qos,calibration]
+[--only substring] [--skip-apps] [--families micro,kv_quant,qos,obs]
 [--json-out BENCH_kv_quant.json] [--json-out-dir .]
 
 ``--json-out`` writes the JSON summary of the selected summarizable family
-(kv_quant, qos, or calibration); select exactly one of them when using it.
-``--json-out-dir`` writes ``BENCH_<family>.json`` into the directory for
-*every* summarizable family selected.
+(kv_quant, qos, calibration, or obs); select exactly one of them when using
+it. ``--json-out-dir`` writes ``BENCH_<family>.json`` into the directory
+for *every* summarizable family selected; a family whose summary raises is
+reported (and fails the run) without aborting the remaining families.
 """
 
 from __future__ import annotations
@@ -26,12 +27,14 @@ def _families():
     from repro.heimdall.interference import ALL_INTERFERENCE
     from repro.heimdall.kv_quant import ALL_KV_QUANT
     from repro.heimdall.micro import ALL_MICRO
+    from repro.heimdall.obs import ALL_OBS
     from repro.heimdall.qos import ALL_QOS
     return {"micro": list(ALL_MICRO),
             "interference": list(ALL_INTERFERENCE),
             "kv_quant": list(ALL_KV_QUANT),
             "qos": list(ALL_QOS),
             "calibration": list(ALL_CALIBRATION),
+            "obs": list(ALL_OBS),
             "apps": list(ALL_APPS)}
 
 
@@ -46,10 +49,13 @@ def _summary_fn(family: str):
     if family == "calibration":
         from repro.heimdall.calibration import calibration_summary
         return calibration_summary
+    if family == "obs":
+        from repro.heimdall.obs import obs_summary
+        return obs_summary
     return None
 
 
-SUMMARIZABLE = ("kv_quant", "qos", "calibration")
+SUMMARIZABLE = ("kv_quant", "qos", "calibration", "obs")
 
 
 def main() -> None:
@@ -59,7 +65,7 @@ def main() -> None:
     ap.add_argument("--families", default=None,
                     help="comma-separated families to run "
                          "(micro,interference,kv_quant,qos,calibration,"
-                         "apps); default: all minus --skip-* flags")
+                         "obs,apps); default: all minus --skip-* flags")
     ap.add_argument("--json-out", default=None,
                     help="write the selected summarizable family's JSON "
                          "summary (one of: %s) to this path"
@@ -72,6 +78,7 @@ def main() -> None:
     ap.add_argument("--skip-kv-quant", action="store_true")
     ap.add_argument("--skip-qos", action="store_true")
     ap.add_argument("--skip-calibration", action="store_true")
+    ap.add_argument("--skip-obs", action="store_true")
     args = ap.parse_args()
 
     fams = _families()
@@ -88,11 +95,13 @@ def main() -> None:
                    + ([] if args.skip_kv_quant else fams["kv_quant"])
                    + ([] if args.skip_qos else fams["qos"])
                    + ([] if args.skip_calibration else fams["calibration"])
+                   + ([] if args.skip_obs else fams["obs"])
                    + ([] if args.skip_apps else fams["apps"]))
         selected_summaries = [
             f for f, skipped in (("kv_quant", args.skip_kv_quant),
                                  ("qos", args.skip_qos),
-                                 ("calibration", args.skip_calibration))
+                                 ("calibration", args.skip_calibration),
+                                 ("obs", args.skip_obs))
             if not skipped]
     if args.json_out and len(selected_summaries) != 1:
         sys.exit("--json-out writes one family's JSON summary; select "
@@ -114,6 +123,7 @@ def main() -> None:
             print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
                   flush=True)
             traceback.print_exc(file=sys.stderr)
+    failed_summaries = []
     if args.json_out:
         summary = _summary_fn(selected_summaries[0])()
         with open(args.json_out, "w") as f:
@@ -122,11 +132,24 @@ def main() -> None:
     if args.json_out_dir:
         os.makedirs(args.json_out_dir, exist_ok=True)
         for fam in selected_summaries:
+            # one family's broken summary must not abort the sweep: write
+            # every summary that succeeds, report the rest, exit nonzero
+            try:
+                summary = _summary_fn(fam)()
+            except Exception as e:      # noqa: BLE001
+                failed_summaries.append(fam)
+                print(f"summary for {fam} FAILED: "
+                      f"{type(e).__name__}: {e}", file=sys.stderr)
+                traceback.print_exc(file=sys.stderr)
+                continue
             path = os.path.join(args.json_out_dir, f"BENCH_{fam}.json")
             with open(path, "w") as f:
-                json.dump(_summary_fn(fam)(), f, indent=2)
+                json.dump(summary, f, indent=2)
             print(f"wrote {path}", file=sys.stderr)
-    if failures:
+    if failed_summaries:
+        print(f"failed summaries: {','.join(failed_summaries)}",
+              file=sys.stderr)
+    if failures or failed_summaries:
         sys.exit(1)
 
 

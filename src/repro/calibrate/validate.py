@@ -29,6 +29,7 @@ from typing import Optional, Sequence
 
 from repro.calibrate.profile import CalibrationProfile
 from repro.fabric.contention import Flow
+from repro.obs.trace import NULL_TRACER
 
 MiB = 1 << 20
 
@@ -178,16 +179,18 @@ class ValidationReport:
         }
 
 
-def _durations(system, flows: Sequence[Flow]) -> dict:
+def _durations(system, flows: Sequence[Flow],
+               tracer=NULL_TRACER) -> dict:
     from repro.fabric.sim import simulate
-    res = simulate(system.fabric, system.resolve_flows(flows))
+    res = simulate(system.fabric, system.resolve_flows(flows),
+                   tracer=tracer)
     return {r.flow.id: r.duration for r in res}
 
 
 def validate_scenarios(profile: CalibrationProfile, truth_system, *,
                        preset: Optional[str] = None,
-                       scenarios: Optional[dict] = None
-                       ) -> ValidationReport:
+                       scenarios: Optional[dict] = None,
+                       tracer=NULL_TRACER) -> ValidationReport:
     """Replay the preset's interference/qos scenarios on truth vs model.
 
     ``truth_system`` is the machine the measurements came from (for the
@@ -196,6 +199,13 @@ def validate_scenarios(profile: CalibrationProfile, truth_system, *,
     re-measuring). Each scenario's flows run identically on three fabrics:
     the truth (measured), the calibrated model (predicted), and the
     nominal preset (the accountability baseline).
+
+    An enabled ``tracer`` records each replay with its provenance: the
+    truth run's fabric tracks land under process ``"truth/fabric"``, the
+    calibrated model's under ``"calibrated/fabric"``, the datasheet
+    preset's under ``"nominal/fabric"``, and every span/flow event carries
+    ``provenance`` and ``scenario`` tags — so a Perfetto view shows the
+    same contended flows on all three fabrics, stacked.
     """
     from repro.fabric.systems import from_profile, get_system
     name = preset or profile.system
@@ -208,9 +218,16 @@ def validate_scenarios(profile: CalibrationProfile, truth_system, *,
     nominal = get_system(name)
     out = []
     for sc_name, flows in sorted(scenarios.items()):
-        pred = _durations(calibrated, flows)
-        meas = _durations(truth_system, flows)
-        nom = _durations(nominal, flows)
+
+        def _tr(provenance):
+            # scenarios replay at overlapping sim times — distinct track
+            # processes per (scenario, provenance) keep timelines separable
+            return tracer.scoped(f"{sc_name}/{provenance}",
+                                 provenance=provenance, scenario=sc_name)
+
+        pred = _durations(calibrated, flows, _tr("calibrated"))
+        meas = _durations(truth_system, flows, _tr("truth"))
+        nom = _durations(nominal, flows, _tr("nominal"))
         out.append(ScenarioValidation(
             sc_name,
             tuple(FlowError(fid, pred[fid], meas[fid], nom[fid])

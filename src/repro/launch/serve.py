@@ -36,6 +36,8 @@ from repro.config.base import ParallelConfig, get_config
 from repro.core.offload import put_tree
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import Model
+from repro.obs.trace import NULL_TRACER
+from repro.runtime.fault import StragglerStats
 
 
 @dataclasses.dataclass
@@ -56,8 +58,15 @@ class Result:
 class ServeEngine:
     def __init__(self, cfg, mesh=None,
                  parallel: ParallelConfig = ParallelConfig(fsdp=False),
-                 offload_weights: bool = False, rng_seed: int = 0):
+                 offload_weights: bool = False, rng_seed: int = 0,
+                 tracer=NULL_TRACER):
         self.cfg = cfg
+        # Observability: wall-clock prefill/decode-step spans plus a
+        # StragglerStats fed one sample per decode step — its inflation
+        # flag and summary land in the metrics snapshot, the signal the
+        # elastic-degradation loop will key on.
+        self.tracer = tracer
+        self.straggler = StragglerStats()
         mesh = mesh or make_host_mesh()
         self.model = Model.create(cfg, mesh, parallel)
         params = self.model.init(jax.random.key(rng_seed))
@@ -82,32 +91,57 @@ class ServeEngine:
 
     def serve(self, requests: list[Request]) -> list[Result]:
         B = len(requests)
+        tracer = self.tracer
         plen = max(len(r.prompt) for r in requests)
         toks = np.zeros((B, plen), np.int32)
         for i, r in enumerate(requests):
             toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
+        if tracer.enabled:
+            for r in requests:
+                tracer.instant("serve.admit", track=("serving", "engine"),
+                               cat="serve", rid=r.rid,
+                               prompt_len=len(r.prompt), max_new=r.max_new)
         t0 = time.perf_counter()
-        params = self._params()
         max_new = max(r.max_new for r in requests)
-        logits, cache = self._prefill(params, {"tokens": jnp.asarray(toks)},
-                                      plen + max_new)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        jax.block_until_ready(tok)
+        with tracer.span("serve.prefill", track=("serving", "engine"),
+                         cat="serve", batch=B, prompt_len=plen):
+            params = self._params()
+            logits, cache = self._prefill(params,
+                                          {"tokens": jnp.asarray(toks)},
+                                          plen + max_new)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            jax.block_until_ready(tok)
         prefill_ms = (time.perf_counter() - t0) * 1e3
 
         outs = [[] for _ in requests]
         t0 = time.perf_counter()
         for s in range(max_new):
-            params = self._params()
-            logits, cache = self._decode(params, cache, tok,
-                                         jnp.int32(plen + s))
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            # one device read for the whole batch, not B scalar reads
-            tok_host = np.asarray(tok)
+            ts = time.perf_counter()
+            with tracer.span("serve.decode_step",
+                             track=("serving", "engine"), cat="serve",
+                             step=s, batch=B):
+                params = self._params()
+                logits, cache = self._decode(params, cache, tok,
+                                             jnp.int32(plen + s))
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                # one device read for the whole batch, not B scalar reads
+                tok_host = np.asarray(tok)
+            # per-step wall time feeds the straggler detector: sustained
+            # p95/median inflation is the elastic layer's degrade signal
+            self.straggler.record(time.perf_counter() - ts)
             for i in range(B):
                 outs[i].append(int(tok_host[i, 0]))
         jax.block_until_ready(tok)
         ms_per_tok = (time.perf_counter() - t0) * 1e3 / max_new
+        if tracer.enabled:
+            m = tracer.metrics
+            m.add("serve.requests", B)
+            m.add("serve.decode_steps", max_new)
+            m.add("serve.tokens_generated", B * max_new)
+            m.set("serve.prefill_ms", prefill_ms)
+            m.set("serve.decode_ms_per_tok", ms_per_tok)
+            for k, v in self.straggler.summary().items():
+                m.set(f"serve.straggler.{k}", v)
         return [Result(r.rid, outs[i][:r.max_new], prefill_ms, ms_per_tok)
                 for i, r in enumerate(requests)]
 
@@ -168,13 +202,19 @@ class DecodeScheduler:
     """
 
     def __init__(self, cache, *, system=None, background: tuple = (),
-                 step_time: float = 500e-6, weight=None, priority=None):
+                 step_time: float = 500e-6, weight=None, priority=None,
+                 tracer=NULL_TRACER):
         self.cache = cache
         self.system = system
         self.background = background
         self.step_time = float(step_time)
         self.weight = weight          # None -> pager's configured QoS class
         self.priority = priority
+        # Observability: admission instants (with deadline slack), one
+        # async request span admit->finish per sequence, and a B/E span
+        # per fired decode step — all in sim time, so the exported trace
+        # lines up with the fabric's per-link utilization tracks.
+        self.tracer = tracer
 
     def ready_times(self, seq_ids: list, plan) -> dict:
         """Sim time each sequence's host pages are fully resident."""
@@ -199,6 +239,8 @@ class DecodeScheduler:
         steps = []
         t = min(ready.values()) if ready else 0.0
         k = 0
+        tracer = self.tracer
+        traced = tracer.enabled
         while any(r > 0 for r in remaining.values()):
             resident = set(plan.ready_by(t))
             active = tuple(s for s in seq_ids
@@ -207,17 +249,51 @@ class DecodeScheduler:
                 t = min(ready[s] for s in seq_ids if remaining[s] > 0)
                 continue
             for s in active:
-                admit.setdefault(s, t)
+                if s not in admit:
+                    admit[s] = t
+                    if traced:
+                        # slack: how long the sequence sat decode-ready
+                        # (pages landed at ready[s]) before the step grid
+                        # admitted it — deadline-alignment cost, not fabric
+                        tracer.instant(
+                            "sched.admit", ts=t,
+                            track=("scheduler", "admissions"), cat="sched",
+                            seq=s, ready=ready[s],
+                            deadline_slack=t - ready[s])
+                        tracer.async_begin(
+                            f"seq{s}", id=f"seq{s}", ts=t,
+                            track=("scheduler", "requests"), cat="sched",
+                            seq=s, n_steps=n_steps)
                 remaining[s] -= 1
                 if remaining[s] == 0:
                     finish[s] = t + self.step_time
+                    if traced:
+                        tracer.async_end(
+                            f"seq{s}", id=f"seq{s}", ts=finish[s],
+                            track=("scheduler", "requests"), cat="sched",
+                            completion=finish[s])
             steps.append(DecodeStep(k, t, active, len(resident)))
+            if traced:
+                tracer.begin("sched.step", ts=t,
+                             track=("scheduler", "steps"), cat="sched",
+                             step=k, batch=len(active),
+                             pages_resident=len(resident))
+                tracer.end("sched.step", ts=t + self.step_time,
+                           track=("scheduler", "steps"), cat="sched")
             k += 1
             t += self.step_time
         makespan = max(finish.values()) if finish else 0.0
         sync = plan.total_time + n_steps * self.step_time
-        return DecodeSchedule(tuple(steps), admit, finish, makespan, sync,
-                              plan.total_time, self.step_time)
+        sched = DecodeSchedule(tuple(steps), admit, finish, makespan, sync,
+                               plan.total_time, self.step_time)
+        if traced:
+            m = tracer.metrics
+            m.add("sched.steps", len(steps))
+            m.add("sched.sequences", len(seq_ids))
+            m.set("sched.makespan_s", makespan)
+            m.set("sched.mean_completion_s", sched.mean_completion)
+            m.set("sched.prefetch_total_s", plan.total_time)
+        return sched
 
 
 def paired_kv_caches(*, requests: int = 8, tokens: int = 1056,
@@ -249,7 +325,8 @@ def simulate_paged_decode(*, requests: int = 8, prompt: int = 1024,
                           "tpu_v5e", step_us: float = 100.0,
                           with_background: bool = True,
                           prefetch_priority: int = 0,
-                          calibration_profile=None) -> dict:
+                          calibration_profile=None,
+                          tracer=NULL_TRACER) -> dict:
     """fp16-vs-int8 decode scheduling comparison on one page set.
 
     Builds two pagers with identical page placement — one bf16, one with
@@ -267,6 +344,12 @@ def simulate_paged_decode(*, requests: int = 8, prompt: int = 1024,
     machine — every ETA and admission deadline then rests on *fitted* link
     constants instead of datasheet numbers (the serve half of the
     run -> fit -> validate -> serve loop).
+
+    An enabled ``tracer`` records both runs into one trace, each scoped by
+    label — the fp16 run's fabric tracks live under process
+    ``"fp16/fabric"``, the int8 run's under ``"int8/fabric"`` — so the two
+    contended prefetches can be compared side by side in Perfetto; the
+    metrics snapshot is embedded in the report under ``"metrics"``.
     """
     from repro.fabric.contention import Flow
     from repro.fabric.systems import from_profile, get_system
@@ -294,9 +377,11 @@ def simulate_paged_decode(*, requests: int = 8, prompt: int = 1024,
                               head_dim=head_dim, weights=weights)
     for label, cache in caches.items():
         seqs = list(range(requests))
+        sub = tracer.scoped(label, run=label)
+        cache.tracer = sub            # pager spans + fabric sim timelines
         sched = DecodeScheduler(cache, system=system, background=bg,
                                 step_time=step_us * 1e-6,
-                                priority=prefetch_priority)
+                                priority=prefetch_priority, tracer=sub)
         ds = sched.schedule(seqs, gen)
         n_host = len(cache.host_pages(seqs))
         out[label] = {
@@ -317,6 +402,8 @@ def simulate_paged_decode(*, requests: int = 8, prompt: int = 1024,
         fp["prefetch_total_s"] / max(q["prefetch_total_s"], 1e-18), 3)
     out["decode_latency_speedup"] = round(
         fp["mean_completion_s"] / max(q["mean_completion_s"], 1e-18), 3)
+    if tracer.enabled:
+        out["metrics"] = tracer.metrics.to_json()
     return out
 
 
@@ -336,19 +423,48 @@ def main():
     ap.add_argument("--calibration-profile", default=None,
                     help="path to a CalibrationProfile JSON; the paged-sim "
                          "then plans on fitted link constants")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="write a Chrome trace-event file (open in "
+                         "https://ui.perfetto.dev) covering the run: "
+                         "per-link utilization tracks, flow lifecycles, "
+                         "pager and scheduler/engine spans")
+    ap.add_argument("--metrics-out", default=None, metavar="METRICS.json",
+                    help="write the metrics snapshot "
+                         "(MetricsRegistry.to_json) alongside the report")
     args = ap.parse_args()
+
+    tracer = NULL_TRACER
+    if args.trace_out or args.metrics_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
+
+    def _flush_obs():
+        if args.trace_out:
+            from repro.obs import write_chrome_trace
+            write_chrome_trace(tracer, args.trace_out)
+            print(f"# trace: {args.trace_out} "
+                  f"({len(tracer.events)} events; open in "
+                  "https://ui.perfetto.dev)")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(tracer.metrics.to_json(), f, indent=2,
+                          sort_keys=True)
+            print(f"# metrics: {args.metrics_out}")
 
     if args.paged_sim:
         print(json.dumps(simulate_paged_decode(
             requests=args.requests, gen=args.gen,
             system_name=args.system, step_us=args.step_us,
-            calibration_profile=args.calibration_profile), indent=2))
+            calibration_profile=args.calibration_profile,
+            tracer=tracer), indent=2))
+        _flush_obs()
         return
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    engine = ServeEngine(cfg, offload_weights=args.offload_weights)
+    engine = ServeEngine(cfg, offload_weights=args.offload_weights,
+                         tracer=tracer)
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                     args.prompt - (i % 4)).astype(np.int32),
@@ -364,6 +480,7 @@ def main():
         "offloaded": args.offload_weights,
         "sample": results[0].tokens[:8],
     }))
+    _flush_obs()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,38 @@
+"""repro.obs — tracing + metrics substrate for the fabric-to-serving stack.
+
+The paper's core method is observation: Heimdall exposes what the
+interconnect is actually doing, and every optimization follows from seeing
+those timelines. This package is the runtime counterpart for our stack —
+one shared event vocabulary threaded through every layer that moves bytes
+or makes a scheduling decision:
+
+  * ``fabric.sim.simulate(tracer=)``      — per-flow lifecycle spans and
+                                            per-link utilization timelines
+  * ``serving.pager`` / ``PagedKVCache``  — spill/fetch/append spans,
+                                            hit/miss/bytes counters per tier
+  * ``launch.serve`` (engine + scheduler) — admission, deadline slack,
+                                            per-step decode spans,
+                                            straggler statistics
+  * ``calibrate.validate``                — truth/calibrated/nominal
+                                            provenance tags on replays
+
+Exports: ``Tracer`` (spans, instants, async flows, counters; injectable
+deterministic clock), ``NullTracer``/``NULL_TRACER`` (free when disabled),
+``MetricsRegistry`` (labeled counters/gauges, ``to_json`` snapshot),
+``chrome_trace``/``write_chrome_trace`` (Perfetto-loadable export),
+``link_timelines`` (utilization reconstruction + byte conservation).
+"""
+
+from repro.obs.export import (chrome_trace, validate_chrome_trace,
+                              write_chrome_trace)
+from repro.obs.metrics import NULL_METRICS, MetricsRegistry, NullMetrics
+from repro.obs.timeline import LinkTimeline, link_timelines
+from repro.obs.trace import (DEFAULT_TRACK, NULL_TRACER, NullTracer,
+                             TraceEvent, Tracer)
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "TraceEvent", "DEFAULT_TRACK",
+    "MetricsRegistry", "NullMetrics", "NULL_METRICS",
+    "chrome_trace", "write_chrome_trace", "validate_chrome_trace",
+    "LinkTimeline", "link_timelines",
+]

@@ -1,0 +1,132 @@
+"""Chrome trace-event JSON export (Perfetto / chrome://tracing).
+
+``chrome_trace`` renders a ``Tracer``'s event list into the trace-event
+format: every ``(process, thread)`` track becomes a pid/tid pair with
+metadata naming events, spans become matched B/E pairs, async lifecycles
+(fabric flows) become b/n/e triples correlated by id, and counter samples
+become multi-series "C" tracks — the per-link utilization timelines render
+as stacked area charts under each link's track.
+
+Determinism is part of the contract: with an injected fixed clock the
+emitted JSON is byte-stable (pids/tids assigned in first-seen order, events
+stably sorted by timestamp), which is what the golden-file test pins.
+
+``validate_chrome_trace`` is the self-check the obs benchmark family and
+the tests share: timestamps sorted, B/E balanced per track, async events
+balanced per (cat, id).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Union
+
+from repro.obs.trace import NullTracer, Tracer
+
+_US = 1e6                        # trace-event timestamps are microseconds
+
+
+def chrome_trace(tracer: Union[Tracer, NullTracer]) -> dict:
+    """Render the tracer's events as a Chrome trace-event JSON object."""
+    pids: dict[str, int] = {}
+    tids: dict[tuple, int] = {}
+    meta: list[dict] = []
+    out: list[dict] = []
+    # Stable sort: events at equal timestamps keep emission order, so an E
+    # and the next span's B at the same instant stay correctly ordered.
+    for ev in sorted(tracer.events, key=lambda e: e.ts):
+        proc, thread = ev.track
+        if proc not in pids:
+            pids[proc] = len(pids) + 1
+            meta.append({"ph": "M", "pid": pids[proc], "tid": 0,
+                         "name": "process_name",
+                         "args": {"name": proc}})
+        if ev.track not in tids:
+            tids[ev.track] = sum(1 for t in tids if t[0] == proc) + 1
+            meta.append({"ph": "M", "pid": pids[proc],
+                         "tid": tids[ev.track], "name": "thread_name",
+                         "args": {"name": thread}})
+        e = {"ph": ev.kind, "name": ev.name, "pid": pids[proc],
+             "tid": tids[ev.track], "ts": ev.ts * _US}
+        if ev.cat:
+            e["cat"] = ev.cat
+        if ev.kind == "i":
+            e["s"] = "t"                       # thread-scoped instant
+        if ev.kind in ("b", "n", "e"):
+            e["id"] = ev.id
+            e.setdefault("cat", "async")       # async matching needs a cat
+        if ev.args:
+            e["args"] = ev.args
+        out.append(e)
+    return {"traceEvents": meta + out, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(tracer: Union[Tracer, NullTracer],
+                       path: str) -> dict:
+    """Write the trace JSON to ``path``; returns the trace object."""
+    trace = chrome_trace(tracer)
+    with open(path, "w") as f:
+        json.dump(trace, f, indent=1)
+    return trace
+
+
+def validate_chrome_trace(trace: dict) -> dict:
+    """Structural self-check of an exported trace; raises ``ValueError``
+    naming the first violation. Returns counts for reporting.
+
+    Checks: timestamps non-decreasing within the event stream, B/E pairs
+    balanced (LIFO) per (pid, tid), async b/e balanced per (cat, id),
+    counter samples numeric.
+    """
+    events = trace["traceEvents"]
+    last_ts = None
+    stacks: dict[tuple, list] = {}
+    async_open: dict[tuple, int] = {}
+    counts = {"events": len(events), "spans": 0, "async": 0,
+              "counters": 0, "instants": 0}
+    for e in events:
+        ph = e["ph"]
+        if ph == "M":
+            continue
+        ts = e["ts"]
+        if last_ts is not None and ts < last_ts:
+            raise ValueError(f"timestamps out of order: {ts} after "
+                             f"{last_ts} ({e['name']!r})")
+        last_ts = ts
+        key = (e["pid"], e["tid"])
+        if ph == "B":
+            stacks.setdefault(key, []).append(e["name"])
+            counts["spans"] += 1
+        elif ph == "E":
+            stack = stacks.get(key)
+            if not stack:
+                raise ValueError(f"E without B on track {key}: "
+                                 f"{e['name']!r}")
+            top = stack.pop()
+            if top != e["name"]:
+                raise ValueError(f"mismatched span nesting on {key}: "
+                                 f"E {e['name']!r} closes B {top!r}")
+        elif ph == "b":
+            async_open[(e.get("cat"), e["id"])] = \
+                async_open.get((e.get("cat"), e["id"]), 0) + 1
+            counts["async"] += 1
+        elif ph == "e":
+            k = (e.get("cat"), e["id"])
+            if async_open.get(k, 0) <= 0:
+                raise ValueError(f"async end without begin for {k}")
+            async_open[k] -= 1
+        elif ph == "C":
+            for series, v in e.get("args", {}).items():
+                if not isinstance(v, (int, float)):
+                    raise ValueError(f"non-numeric counter series "
+                                     f"{series!r} in {e['name']!r}")
+            counts["counters"] += 1
+        elif ph == "i":
+            counts["instants"] += 1
+    open_spans = {k: v for k, v in stacks.items() if v}
+    if open_spans:
+        raise ValueError(f"unclosed B spans: {open_spans}")
+    dangling = {k for k, v in async_open.items() if v}
+    if dangling:
+        raise ValueError(f"unclosed async spans: {sorted(dangling)}")
+    return counts

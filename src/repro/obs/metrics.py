@@ -1,0 +1,76 @@
+"""MetricsRegistry: labeled counters and gauges with a JSON snapshot.
+
+The aggregate half of the observability substrate (``repro.obs.trace`` is
+the event half): counters accumulate (bytes moved per tier, pages hit/miss,
+decode steps fired), gauges hold last-written values (straggler p95, decode
+makespan). Labels are folded into the metric key deterministically, so
+``to_json()`` is stable across runs with the same activity — the property
+the BENCH_obs golden checks rely on.
+
+Zero-dependency by design; the hot path pays one dict update per touch.
+``NULL_METRICS`` is the no-op twin the ``NullTracer`` hands out so
+instrumented code never branches on "is observability on".
+"""
+
+from __future__ import annotations
+
+
+def _key(name: str, labels: dict) -> str:
+    """Deterministic flat key: ``name`` or ``name[k=v|k2=v2]`` (sorted)."""
+    if not labels:
+        return name
+    inner = "|".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}[{inner}]"
+
+
+class MetricsRegistry:
+    """Labeled counters (monotonic adds) and gauges (last write wins)."""
+
+    def __init__(self):
+        self._counters: dict[str, float] = {}
+        self._gauges: dict[str, float] = {}
+
+    # -- writes --------------------------------------------------------------
+    def add(self, name: str, value: float = 1.0, **labels) -> None:
+        k = _key(name, labels)
+        self._counters[k] = self._counters.get(k, 0.0) + value
+
+    def set(self, name: str, value, **labels) -> None:
+        self._gauges[_key(name, labels)] = value
+
+    # -- reads ---------------------------------------------------------------
+    def counter(self, name: str, **labels) -> float:
+        return self._counters.get(_key(name, labels), 0.0)
+
+    def gauge(self, name: str, default=None, **labels):
+        return self._gauges.get(_key(name, labels), default)
+
+    def to_json(self) -> dict:
+        """Snapshot payload: sorted keys, counters and gauges separated."""
+        return {
+            "counters": {k: self._counters[k]
+                         for k in sorted(self._counters)},
+            "gauges": {k: self._gauges[k] for k in sorted(self._gauges)},
+        }
+
+
+class NullMetrics:
+    """No-op twin of ``MetricsRegistry`` (the ``NullTracer``'s registry)."""
+
+    def add(self, name, value=1.0, **labels):
+        pass
+
+    def set(self, name, value, **labels):
+        pass
+
+    def counter(self, name, **labels) -> float:
+        return 0.0
+
+    def gauge(self, name, default=None, **labels):
+        return default
+
+    def to_json(self) -> dict:
+        return {"counters": {}, "gauges": {}}
+
+
+NULL_METRICS = NullMetrics()

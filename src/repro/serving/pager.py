@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.placement import interleave_pages
 from repro.heimdall.harness import place
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -69,8 +70,12 @@ class PagedKVCache:
 
     TIERS = ("hbm", "host")
 
-    def __init__(self, cfg: PagerConfig):
+    def __init__(self, cfg: PagerConfig, tracer=NULL_TRACER):
         self.cfg = cfg
+        # Observability (repro.obs): spill/fetch/append spans plus
+        # hit/miss/bytes-moved counters per tier; NULL_TRACER by default so
+        # the decode hot path pays nothing when tracing is off.
+        self.tracer = tracer
         shape = (cfg.n_pages, cfg.page_size, cfg.kv_heads, cfg.head_dim)
         dt = jnp.dtype(cfg.dtype)
         self.tier_of_page = interleave_pages(cfg.n_pages, list(cfg.weights))
@@ -133,22 +138,30 @@ class PagedKVCache:
         """
         T = k.shape[0]
         start = self.lens[seq_id]
-        self._grow(seq_id, start + T)
-        ps = self.cfg.page_size
-        pos = np.arange(start, start + T)
-        table = np.asarray(self.tables[seq_id], np.int32)
-        pages = jnp.asarray(table[pos // ps])
-        offs = jnp.asarray(pos % ps, jnp.int32)
-        self.k_pool = self.k_pool.at[pages, offs].set(
-            k.astype(self.k_pool.dtype))
-        self.v_pool = self.v_pool.at[pages, offs].set(
-            v.astype(self.v_pool.dtype))
+        with self.tracer.span("pager.append", track=("pager", "writes"),
+                              cat="pager", seq=seq_id, tokens=T):
+            self._grow(seq_id, start + T)
+            ps = self.cfg.page_size
+            pos = np.arange(start, start + T)
+            table = np.asarray(self.tables[seq_id], np.int32)
+            pages = jnp.asarray(table[pos // ps])
+            offs = jnp.asarray(pos % ps, jnp.int32)
+            self.k_pool = self.k_pool.at[pages, offs].set(
+                k.astype(self.k_pool.dtype))
+            self.v_pool = self.v_pool.at[pages, offs].set(
+                v.astype(self.v_pool.dtype))
         self.lens[seq_id] = start + T
         self._bt_cache.clear()
         self._quant_pools = None
         # the HBM pool is the live copy again; any host shadow is stale —
         # a fetch_spilled without a fresh spill must not clobber this write
         self._spilled = False
+        if self.tracer.enabled:
+            elem = jnp.dtype(self.cfg.dtype).itemsize
+            self.tracer.metrics.add("pager.append.tokens", T)
+            self.tracer.metrics.add(
+                "pager.bytes_written", tier="hbm",
+                value=2 * T * self.cfg.kv_heads * self.cfg.head_dim * elem)
 
     # -- reads ---------------------------------------------------------------
     def block_table(self, seq_ids: list[int]) -> tuple:
@@ -172,10 +185,26 @@ class PagedKVCache:
         self._bt_cache[key] = out
         return out
 
+    def _count_page_touches(self, seq_ids: list[int]) -> None:
+        """Tier hit/miss counters for one attention call: an HBM-resident
+        page is a hit (attended in place), a host-tier page is a miss (it
+        must cross the contended link before the step can see it)."""
+        hits = misses = 0
+        for s in seq_ids:
+            for p in self.tables[s]:
+                if self.tier_of_page[p] == 1:
+                    misses += 1
+                else:
+                    hits += 1
+        self.tracer.metrics.add("pager.page_hits", hits, tier="hbm")
+        self.tracer.metrics.add("pager.page_misses", misses, tier="host")
+
     def attend(self, q: jax.Array, seq_ids: list[int],
                interpret: Optional[bool] = None) -> jax.Array:
         """Decode attention via the Pallas paged kernel. q: (B, Hq, dh)."""
         from repro.kernels.paged_attention import paged_attention
+        if self.tracer.enabled:
+            self._count_page_touches(seq_ids)
         bt, lens = self.block_table(seq_ids)
         return paged_attention(q, self.k_pool, self.v_pool, bt, lens,
                                interpret=interpret)
@@ -192,6 +221,8 @@ class PagedKVCache:
         """
         from repro.kernels.paged_attention import paged_attention_quant
         from repro.kernels.quant import quantize_pages
+        if self.tracer.enabled:
+            self._count_page_touches(seq_ids)
         bt, lens = self.block_table(seq_ids)
         if self._quant_pools is None:
             self._quant_pools = (quantize_pages(self.k_pool,
@@ -210,22 +241,29 @@ class PagedKVCache:
         carries half the bytes. Returns pages spilled."""
         if not self._host_mask.any():
             return 0
-        mask = jnp.asarray(self._host_mask)
-        k_cold = jnp.where(mask[:, None, None, None], self.k_pool, 0)
-        v_cold = jnp.where(mask[:, None, None, None], self.v_pool, 0)
-        if self.cfg.kv_dtype == "int8":
-            from repro.kernels.quant import quantize_pages
-            kq, ks = quantize_pages(k_cold)
-            vq, vs = quantize_pages(v_cold)
-            self.k_pool_host = place(kq, "host")
-            self.v_pool_host = place(vq, "host")
-            self.k_scales_host = place(ks, "host")
-            self.v_scales_host = place(vs, "host")
-        else:
-            self.k_pool_host = place(k_cold, "host")
-            self.v_pool_host = place(v_cold, "host")
+        n_spilled = int(self._host_mask.sum())
+        with self.tracer.span("pager.spill", track=("pager", "tiers"),
+                              cat="pager", pages=n_spilled):
+            mask = jnp.asarray(self._host_mask)
+            k_cold = jnp.where(mask[:, None, None, None], self.k_pool, 0)
+            v_cold = jnp.where(mask[:, None, None, None], self.v_pool, 0)
+            if self.cfg.kv_dtype == "int8":
+                from repro.kernels.quant import quantize_pages
+                kq, ks = quantize_pages(k_cold)
+                vq, vs = quantize_pages(v_cold)
+                self.k_pool_host = place(kq, "host")
+                self.v_pool_host = place(vq, "host")
+                self.k_scales_host = place(ks, "host")
+                self.v_scales_host = place(vs, "host")
+            else:
+                self.k_pool_host = place(k_cold, "host")
+                self.v_pool_host = place(v_cold, "host")
         self._spilled = True
-        return int(self._host_mask.sum())
+        self.tracer.metrics.add("pager.spill.pages", n_spilled, tier="host")
+        self.tracer.metrics.add("pager.spill.bytes",
+                                n_spilled * self.host_page_bytes,
+                                tier="host")
+        return n_spilled
 
     def fetch_spilled(self) -> None:
         """Bring spilled pages back next to the HBM pool (sync fetch — the
@@ -240,22 +278,31 @@ class PagedKVCache:
         """
         if not self._spilled or not self._host_mask.any():
             return
-        mask = jnp.asarray(self._host_mask)
-        if self.cfg.kv_dtype == "int8":
-            from repro.kernels.quant import dequantize_pages
-            kq = place(self.k_pool_host, "hbm")
-            vq = place(self.v_pool_host, "hbm")
-            ks = place(self.k_scales_host, "hbm")
-            vs = place(self.v_scales_host, "hbm")
-            k_h = dequantize_pages(kq, ks, out_dtype=self.k_pool.dtype)
-            v_h = dequantize_pages(vq, vs, out_dtype=self.v_pool.dtype)
-        else:
-            k_h = place(self.k_pool_host, "hbm")
-            v_h = place(self.v_pool_host, "hbm")
-        self.k_pool = jnp.where(mask[:, None, None, None], k_h, self.k_pool)
-        self.v_pool = jnp.where(mask[:, None, None, None], v_h, self.v_pool)
+        n_pages = int(self._host_mask.sum())
+        with self.tracer.span("pager.fetch", track=("pager", "tiers"),
+                              cat="pager", pages=n_pages):
+            mask = jnp.asarray(self._host_mask)
+            if self.cfg.kv_dtype == "int8":
+                from repro.kernels.quant import dequantize_pages
+                kq = place(self.k_pool_host, "hbm")
+                vq = place(self.v_pool_host, "hbm")
+                ks = place(self.k_scales_host, "hbm")
+                vs = place(self.v_scales_host, "hbm")
+                k_h = dequantize_pages(kq, ks, out_dtype=self.k_pool.dtype)
+                v_h = dequantize_pages(vq, vs, out_dtype=self.v_pool.dtype)
+            else:
+                k_h = place(self.k_pool_host, "hbm")
+                v_h = place(self.v_pool_host, "hbm")
+            self.k_pool = jnp.where(mask[:, None, None, None], k_h,
+                                    self.k_pool)
+            self.v_pool = jnp.where(mask[:, None, None, None], v_h,
+                                    self.v_pool)
         self._quant_pools = None
         self._spilled = False
+        self.tracer.metrics.add("pager.fetch.pages", n_pages, tier="host")
+        self.tracer.metrics.add("pager.fetch.bytes",
+                                n_pages * self.host_page_bytes,
+                                tier="host")
 
     @property
     def occupancy(self) -> float:
@@ -297,7 +344,8 @@ class PagedKVCache:
     def plan_prefetch(self, seq_ids: list[int], system=None,
                       background: tuple = (),
                       weight: Optional[float] = None,
-                      priority: Optional[int] = None) -> "PrefetchPlan":
+                      priority: Optional[int] = None,
+                      tracer=None) -> "PrefetchPlan":
         """Schedule host->HBM page prefetches through the fabric simulator.
 
         Pages are fetched one at a time over the host link (one DMA queue),
@@ -319,7 +367,8 @@ class PagedKVCache:
             system=system, background=background,
             weight=self.cfg.prefetch_weight if weight is None else weight,
             priority=(self.cfg.prefetch_priority if priority is None
-                      else priority))
+                      else priority),
+            tracer=self.tracer if tracer is None else tracer)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -337,7 +386,7 @@ class PrefetchPlan:
 
 def plan_prefetch(pages: list, page_bytes: int, system=None,
                   background: tuple = (), weight: float = 1.0,
-                  priority: int = 0) -> PrefetchPlan:
+                  priority: int = 0, tracer=NULL_TRACER) -> PrefetchPlan:
     """Build a PrefetchPlan by simulating chained page flows on the fabric.
 
     ``system`` defaults to the TPU v5e preset (host_dram -> chip0 over
@@ -370,7 +419,11 @@ def plan_prefetch(pages: list, page_bytes: int, system=None,
     bg_sized = [f if f.nbytes > 0
                 else dataclasses.replace(f, nbytes=page_bytes * len(pages))
                 for f in bg]
-    results = simulate(system.fabric, flows + bg_sized)
+    results = simulate(system.fabric, flows + bg_sized, tracer=tracer)
+    if tracer.enabled:
+        tracer.metrics.add("pager.prefetch.pages", len(pages))
+        tracer.metrics.add("pager.prefetch.bytes",
+                           page_bytes * len(pages), tier="host")
     # Key ETAs by flow id — simulate() documents input-order results, but
     # positional zip silently breaks the moment flow construction changes
     # (e.g. background flows interleaved); ids are the contract.
