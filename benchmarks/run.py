@@ -29,12 +29,14 @@ def _families():
     from repro.heimdall.micro import ALL_MICRO
     from repro.heimdall.obs import ALL_OBS
     from repro.heimdall.qos import ALL_QOS
+    from repro.heimdall.resilience import ALL_RESILIENCE
     return {"micro": list(ALL_MICRO),
             "interference": list(ALL_INTERFERENCE),
             "kv_quant": list(ALL_KV_QUANT),
             "qos": list(ALL_QOS),
             "calibration": list(ALL_CALIBRATION),
             "obs": list(ALL_OBS),
+            "resilience": list(ALL_RESILIENCE),
             "apps": list(ALL_APPS)}
 
 
@@ -52,10 +54,13 @@ def _summary_fn(family: str):
     if family == "obs":
         from repro.heimdall.obs import obs_summary
         return obs_summary
+    if family == "resilience":
+        from repro.heimdall.resilience import resilience_summary
+        return resilience_summary
     return None
 
 
-SUMMARIZABLE = ("kv_quant", "qos", "calibration", "obs")
+SUMMARIZABLE = ("kv_quant", "qos", "calibration", "obs", "resilience")
 
 
 def main() -> None:
@@ -65,7 +70,8 @@ def main() -> None:
     ap.add_argument("--families", default=None,
                     help="comma-separated families to run "
                          "(micro,interference,kv_quant,qos,calibration,"
-                         "obs,apps); default: all minus --skip-* flags")
+                         "obs,resilience,apps); default: all minus "
+                         "--skip-* flags")
     ap.add_argument("--json-out", default=None,
                     help="write the selected summarizable family's JSON "
                          "summary (one of: %s) to this path"
@@ -79,6 +85,7 @@ def main() -> None:
     ap.add_argument("--skip-qos", action="store_true")
     ap.add_argument("--skip-calibration", action="store_true")
     ap.add_argument("--skip-obs", action="store_true")
+    ap.add_argument("--skip-resilience", action="store_true")
     args = ap.parse_args()
 
     fams = _families()
@@ -96,12 +103,14 @@ def main() -> None:
                    + ([] if args.skip_qos else fams["qos"])
                    + ([] if args.skip_calibration else fams["calibration"])
                    + ([] if args.skip_obs else fams["obs"])
+                   + ([] if args.skip_resilience else fams["resilience"])
                    + ([] if args.skip_apps else fams["apps"]))
         selected_summaries = [
             f for f, skipped in (("kv_quant", args.skip_kv_quant),
                                  ("qos", args.skip_qos),
                                  ("calibration", args.skip_calibration),
-                                 ("obs", args.skip_obs))
+                                 ("obs", args.skip_obs),
+                                 ("resilience", args.skip_resilience))
             if not skipped]
     if args.json_out and len(selected_summaries) != 1:
         sys.exit("--json-out writes one family's JSON summary; select "

@@ -137,6 +137,37 @@ class FabricTopology:
                          link.latency * lat_f, duplex=link.duplex)
         return out
 
+    def without_nodes(self, names: Iterable[str],
+                      name: Optional[str] = None) -> "FabricTopology":
+        """New topology with ``names`` (and every incident link) removed.
+
+        The hot-removal primitive: a CXL expander pulled from the pool, a
+        failed switch, a drained host. Complements ``rescaled`` — together
+        they express every degradation the runtime injects (a link dropping
+        to a fraction of its bandwidth, a tier disappearing outright).
+        Removing an unknown node is an error; removing a node that leaves a
+        memory tier unreachable is legal — ``validate()`` is the caller's
+        check if full reachability is required.
+        """
+        gone = set(names)
+        missing = sorted(gone - set(self.nodes))
+        if missing:
+            raise ValueError(f"cannot remove unknown node(s) {missing} "
+                             f"from {self.name}; have {sorted(self.nodes)}")
+        out = FabricTopology(name or self.name)
+        for n in self.nodes.values():
+            if n.name not in gone:
+                out.add_node(n.name, n.kind, n.capacity, n.memory_kind)
+        seen: set[tuple] = set()
+        for (a, b), link in self.links.items():
+            key = (min(a, b), max(a, b))
+            if key in seen or a in gone or b in gone:
+                continue
+            seen.add(key)
+            out.add_link(a, b, link.type, link.bandwidth, link.latency,
+                         duplex=link.duplex)
+        return out
+
     # -- queries ------------------------------------------------------------
     def node(self, name: str) -> FabricNode:
         if name not in self.nodes:

@@ -170,6 +170,9 @@ class DecodeSchedule:
     sync_makespan: float         # baseline: stall until ALL pages landed
     prefetch_total: float        # PrefetchPlan.total_time
     step_time: float
+    violations: dict = dataclasses.field(default_factory=dict)
+    # seq id -> overrun (s) past its deadline; only sequences given a
+    # deadline via ``schedule(..., deadlines=)`` can appear here
 
     @property
     def mean_completion(self) -> float:
@@ -225,9 +228,17 @@ class DecodeScheduler:
             out[s] = max((plan.eta[p] for p in pages), default=0.0)
         return out
 
-    def schedule(self, seq_ids: list, n_steps: int) -> DecodeSchedule:
+    def schedule(self, seq_ids: list, n_steps: int,
+                 deadlines: Optional[dict] = None) -> DecodeSchedule:
         """Simulate ``n_steps`` decode steps per sequence, admitting each
-        sequence at its pages' arrival (deadline-aware continuous batch)."""
+        sequence at its pages' arrival (deadline-aware continuous batch).
+
+        ``deadlines`` optionally maps seq id -> SLO completion deadline
+        (s, sim time). A sequence finishing after its deadline lands in
+        ``DecodeSchedule.violations`` with its overrun — the interactive-
+        class protection signal the degradation loop (and its no-reaction
+        baseline) are judged on.
+        """
         plan = self.cache.plan_prefetch(seq_ids, system=self.system,
                                         background=self.background,
                                         weight=self.weight,
@@ -284,8 +295,14 @@ class DecodeScheduler:
             t += self.step_time
         makespan = max(finish.values()) if finish else 0.0
         sync = plan.total_time + n_steps * self.step_time
+        violations = {}
+        if deadlines:
+            for s, dl in deadlines.items():
+                done = finish.get(s)
+                if done is not None and done > dl:
+                    violations[s] = done - dl
         sched = DecodeSchedule(tuple(steps), admit, finish, makespan, sync,
-                               plan.total_time, self.step_time)
+                               plan.total_time, self.step_time, violations)
         if traced:
             m = tracer.metrics
             m.add("sched.steps", len(steps))
@@ -293,6 +310,13 @@ class DecodeScheduler:
             m.set("sched.makespan_s", makespan)
             m.set("sched.mean_completion_s", sched.mean_completion)
             m.set("sched.prefetch_total_s", plan.total_time)
+            if deadlines:
+                m.add("sched.deadline_violations", len(violations))
+                for s, over in violations.items():
+                    tracer.instant("sched.deadline_miss",
+                                   ts=finish[s],
+                                   track=("scheduler", "admissions"),
+                                   cat="sched", seq=s, overrun_s=over)
         return sched
 
 
@@ -418,6 +442,14 @@ def main():
     ap.add_argument("--paged-sim", action="store_true",
                     help="simulated fp16-vs-int8 paged decode scheduling "
                          "report (no model run)")
+    ap.add_argument("--degrade-sim", action="store_true",
+                    help="inject the headline degradation (host link "
+                         "halved mid-serve) and report the reacting run "
+                         "vs the no-reaction baseline (no model run)")
+    ap.add_argument("--degrade-factor", type=float, default=0.5,
+                    help="surviving bandwidth fraction for --degrade-sim")
+    ap.add_argument("--degrade-round", type=int, default=4,
+                    help="serve round the fault fires at (--degrade-sim)")
     ap.add_argument("--system", default="tpu_v5e")
     ap.add_argument("--step-us", type=float, default=100.0)
     ap.add_argument("--calibration-profile", default=None,
@@ -457,6 +489,28 @@ def main():
             system_name=args.system, step_us=args.step_us,
             calibration_profile=args.calibration_profile,
             tracer=tracer), indent=2))
+        _flush_obs()
+        return
+
+    if args.degrade_sim:
+        from repro.runtime.degrade import (DegradedServeConfig,
+                                           host_link_degraded,
+                                           run_degraded_serve)
+        cfg = DegradedServeConfig(system=args.system,
+                                  step_us=args.step_us)
+        sched = host_link_degraded(system=args.system,
+                                   at_round=args.degrade_round,
+                                   factor=args.degrade_factor)
+        react = run_degraded_serve(
+            sched, cfg=cfg, react=True,
+            calibration_profile=args.calibration_profile,
+            tracer=tracer.scoped("react") if tracer.enabled else tracer)
+        base = run_degraded_serve(
+            sched, cfg=cfg, react=False,
+            calibration_profile=args.calibration_profile,
+            tracer=tracer.scoped("baseline") if tracer.enabled else tracer)
+        print(json.dumps({"react": react.to_json(),
+                          "baseline": base.to_json()}, indent=2))
         _flush_obs()
         return
 

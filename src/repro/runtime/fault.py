@@ -7,16 +7,24 @@ wraps the train loop with:
     trailing median step time is declared hung (straggler/failed host) and
     raises ``StepTimeout``; the driver restarts from the last checkpoint
     (in multi-controller deployments the orchestration layer replaces the
-    bad host first; see DESIGN.md).
+    bad host first; see DESIGN.md). The watchdog hands a cancellation
+    event to cooperating thunks so a timed-out step can actually exit
+    instead of living on as a zombie daemon thread.
   * ``retry_with_checkpoint`` — bounded-retry execution of a step thunk
-    with checkpoint restore between attempts.
+    with checkpoint restore between attempts and capped exponential
+    backoff. Only *environmental* failures (``StepTimeout``,
+    ``HostFailure``, plus an opt-in ``retryable`` tuple) are retried —
+    a programming bug must surface, not be laundered through checkpoint
+    restore.
   * ``StragglerStats`` — per-step timing histogram; sustained tail
-    inflation => flag for the elastic layer to shrink the mesh
-    (repro.runtime.elastic).
+    inflation => flag for the elastic layer to shrink the mesh or, in
+    serving, for the degradation loop to replan placement
+    (repro.runtime.elastic / repro.runtime.degrade).
 """
 
 from __future__ import annotations
 
+import inspect
 import statistics
 import threading
 import time
@@ -31,15 +39,43 @@ class HostFailure(RuntimeError):
     pass
 
 
+def _accepts_cancel(fn: Callable) -> bool:
+    """Does ``fn`` take a ``cancel=`` keyword (directly or via **kwargs)?"""
+    try:
+        params = inspect.signature(fn).parameters.values()
+    except (TypeError, ValueError):      # builtins / C callables
+        return False
+    for p in params:
+        if p.kind is inspect.Parameter.VAR_KEYWORD:
+            return True
+        if p.name == "cancel" and p.kind in (
+                inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                inspect.Parameter.KEYWORD_ONLY):
+            return True
+    return False
+
+
 class StepSupervisor:
-    """Watchdog around blocking step calls."""
+    """Watchdog around blocking step calls.
+
+    ``clock`` is injectable so step durations are testable without real
+    sleeps; the timeout wait itself is wall-clock (``Thread.join``). A
+    thunk that accepts a ``cancel=`` keyword receives a
+    ``threading.Event`` that is set when the watchdog fires, so it can
+    stop cooperatively; ``cancel_grace`` bounds how long the supervisor
+    waits for that exit before abandoning the (daemon) thread.
+    """
 
     def __init__(self, timeout_factor: float = 5.0,
-                 min_timeout: float = 60.0, history: int = 20):
+                 min_timeout: float = 60.0, history: int = 20,
+                 clock: Callable[[], float] = time.perf_counter,
+                 cancel_grace: float = 0.5):
         self.timeout_factor = timeout_factor
         self.min_timeout = min_timeout
         self.times: list[float] = []
         self.history = history
+        self.clock = clock
+        self.cancel_grace = cancel_grace
 
     @property
     def timeout(self) -> float:
@@ -49,24 +85,34 @@ class StepSupervisor:
         return max(self.min_timeout, self.timeout_factor * med)
 
     def run(self, fn: Callable, *args):
+        cancel = threading.Event()
+        kwargs = {"cancel": cancel} if _accepts_cancel(fn) else {}
         result = {}
         err = {}
 
         def target():
             try:
-                t0 = time.perf_counter()
-                result["out"] = fn(*args)
-                result["dt"] = time.perf_counter() - t0
+                t0 = self.clock()
+                result["out"] = fn(*args, **kwargs)
+                result["dt"] = self.clock() - t0
             except Exception as e:       # noqa: BLE001
                 err["e"] = e
 
-        th = threading.Thread(target=target, daemon=True)
+        th = threading.Thread(target=target, daemon=True,
+                              name="step-supervisor")
         th.start()
         th.join(self.timeout)
         if th.is_alive():
-            raise StepTimeout(
-                f"step exceeded {self.timeout:.0f}s "
-                f"(median {statistics.median(self.times) if self.times else 0:.1f}s)")
+            # Signal the thunk and give it a bounded window to exit; a
+            # non-cooperative thunk is abandoned (daemon) but a cancel-aware
+            # one unwinds cleanly instead of leaking a zombie thread.
+            cancel.set()
+            th.join(self.cancel_grace)
+            hist = (f"trailing median "
+                    f"{statistics.median(self.times):.1f}s over "
+                    f"{len(self.times)} steps" if self.times
+                    else "no step history yet")
+            raise StepTimeout(f"step exceeded {self.timeout:.0f}s ({hist})")
         if "e" in err:
             raise err["e"]
         self.times.append(result["dt"])
@@ -75,49 +121,80 @@ class StepSupervisor:
 
 
 class StragglerStats:
-    """Flags sustained step-time inflation (p95/median ratio)."""
+    """Flags sustained step-time inflation (p95/median ratio).
 
-    def __init__(self, window: int = 50, ratio: float = 1.5):
+    The detection signal of both the training fault loop and the serving
+    degradation loop (``repro.runtime.degrade``): a healthy window has p95
+    close to its median; a degraded link or sick host stretches the tail
+    first. ``min_samples`` guards against firing on a near-empty window.
+    """
+
+    def __init__(self, window: int = 50, ratio: float = 1.5,
+                 min_samples: int = 10):
         self.window = window
         self.ratio = ratio
+        self.min_samples = max(2, min_samples)
         self.times: list[float] = []
 
     def record(self, dt: float):
         self.times.append(dt)
         self.times = self.times[-self.window:]
 
+    def _stats(self) -> tuple:
+        s = sorted(self.times)
+        # statistics.median averages the middle pair on even-length
+        # windows; the old s[len//2] picked the upper element, which on a
+        # bimodal window inflated the denominator and masked real tails
+        return (statistics.median(s), s[min(len(s) - 1,
+                                            int(len(s) * 0.95))])
+
     @property
     def inflated(self) -> bool:
-        if len(self.times) < 10:
+        if len(self.times) < self.min_samples:
             return False
-        s = sorted(self.times)
-        med = s[len(s) // 2]
-        p95 = s[int(len(s) * 0.95)]
+        med, p95 = self._stats()
         return p95 > self.ratio * med
 
     def summary(self) -> dict:
         if not self.times:
             return {}
-        s = sorted(self.times)
-        return {"median_s": s[len(s) // 2], "p95_s": s[int(len(s) * .95)],
+        med, p95 = self._stats()
+        return {"median_s": med, "p95_s": p95, "n": len(self.times),
                 "inflated": self.inflated}
 
 
 def retry_with_checkpoint(step_fn: Callable, restore_fn: Callable,
                           max_retries: int = 3,
-                          supervisor: Optional[StepSupervisor] = None):
+                          supervisor: Optional[StepSupervisor] = None,
+                          retryable: tuple = (),
+                          backoff_base: float = 1.0,
+                          backoff_cap: float = 30.0,
+                          sleep: Callable[[float], None] = time.sleep):
     """Run ``step_fn(state) -> state`` once, retrying through
-    ``restore_fn() -> state`` on failure."""
+    ``restore_fn() -> state`` on *environmental* failure.
+
+    Retried: ``StepTimeout``, ``HostFailure``, and anything in
+    ``retryable`` (opt-in, e.g. a deployment's transient RPC error). A
+    bare ``RuntimeError`` — or any other exception — is a programming bug
+    and propagates immediately; retrying it through checkpoint restore
+    would silently re-execute the same broken step forever.
+
+    Between attempts the runner sleeps ``min(backoff_cap,
+    backoff_base * 2**(attempt-1))`` seconds; ``sleep`` is injectable so
+    tests assert the backoff sequence without real waiting.
+    """
     sup = supervisor or StepSupervisor()
+    catch = (StepTimeout, HostFailure, *tuple(retryable))
 
     def run(state):
         attempts = 0
         while True:
             try:
                 return sup.run(step_fn, state)
-            except (StepTimeout, HostFailure, RuntimeError) as e:
+            except catch:
                 attempts += 1
                 if attempts > max_retries:
                     raise
+                sleep(min(backoff_cap, backoff_base * 2 ** (attempts - 1)))
                 state = restore_fn()
     return run

@@ -304,6 +304,65 @@ class PagedKVCache:
                                 n_pages * self.host_page_bytes,
                                 tier="host")
 
+    def retier(self, weights) -> dict:
+        """Re-interleave pages across tiers (the elastic replan's "act"
+        step): apply a new ``interleave_pages`` assignment, migrating any
+        spilled data back next to the HBM pool first so nothing is lost.
+
+        The degradation loop (``repro.runtime.degrade``) calls this with
+        ``elastic.replan_interleave``'s output when a spill tier degrades
+        or disappears — pages leave the sick tier, and the bytes that
+        cross the (degraded) link to do so are the migration cost the
+        caller accounts for. Returns ``{"to_fast", "to_slow", "migrated",
+        "weights"}``: ``to_fast``/``to_slow`` count pages whose tier
+        assignment changed; ``migrated`` is True when spilled host data
+        actually moved (a live-HBM pool relabels for free).
+        """
+        new_assign = interleave_pages(self.cfg.n_pages, list(weights))
+        old = self.tier_of_page
+        to_fast = int(((old == 1) & (new_assign == 0)).sum())
+        to_slow = int(((old == 0) & (new_assign == 1)).sum())
+        migrated = bool(self._spilled and to_fast)
+        with self.tracer.span("pager.retier", track=("pager", "tiers"),
+                              cat="pager", to_fast=to_fast,
+                              to_slow=to_slow):
+            if self._spilled:
+                # restore the live HBM copy before relabeling: the host
+                # shadow is only meaningful under the old assignment
+                self.fetch_spilled()
+            self.tier_of_page = new_assign
+            self._host_mask = new_assign == 1
+            if self._host_mask.any() and not hasattr(self, "k_pool_host"):
+                shape = (self.cfg.n_pages, self.cfg.page_size,
+                         self.cfg.kv_heads, self.cfg.head_dim)
+                if self.cfg.kv_dtype == "int8":
+                    sshape = (self.cfg.n_pages, self.cfg.kv_heads)
+                    self.k_pool_host = place(
+                        jnp.zeros(shape, jnp.int8), "host")
+                    self.v_pool_host = place(
+                        jnp.zeros(shape, jnp.int8), "host")
+                    self.k_scales_host = place(
+                        jnp.zeros(sshape, jnp.float32), "host")
+                    self.v_scales_host = place(
+                        jnp.zeros(sshape, jnp.float32), "host")
+                else:
+                    dt = jnp.dtype(self.cfg.dtype)
+                    self.k_pool_host = place(jnp.zeros(shape, dt), "host")
+                    self.v_pool_host = place(jnp.zeros(shape, dt), "host")
+        self.cfg = dataclasses.replace(self.cfg, weights=tuple(weights))
+        self._bt_cache.clear()
+        self._quant_pools = None
+        self._spilled = False
+        if self.tracer.enabled:
+            m = self.tracer.metrics
+            m.add("pager.retier.pages_to_fast", to_fast)
+            m.add("pager.retier.pages_to_slow", to_slow)
+            if migrated:
+                m.add("pager.retier.migrated_bytes",
+                      to_fast * self.host_page_bytes, tier="host")
+        return {"to_fast": to_fast, "to_slow": to_slow,
+                "migrated": migrated, "weights": tuple(weights)}
+
     @property
     def occupancy(self) -> float:
         return 1.0 - len(self.free) / self.cfg.n_pages
@@ -362,12 +421,16 @@ class PagedKVCache:
         streams instead of splitting the link with them, which is the
         class-aware arbitration CXL-Interference shows a shared link needs.
         """
+        src_tier = None
+        if system is not None and getattr(system, "kv_tiers", None):
+            src_tier = system.kv_tiers[1]     # the machine's own spill tier
         return plan_prefetch(
             self.host_pages(seq_ids), self.host_page_bytes,
             system=system, background=background,
             weight=self.cfg.prefetch_weight if weight is None else weight,
             priority=(self.cfg.prefetch_priority if priority is None
                       else priority),
+            src_tier=src_tier,
             tracer=self.tracer if tracer is None else tracer)
 
 
@@ -386,26 +449,41 @@ class PrefetchPlan:
 
 def plan_prefetch(pages: list, page_bytes: int, system=None,
                   background: tuple = (), weight: float = 1.0,
-                  priority: int = 0, tracer=NULL_TRACER) -> PrefetchPlan:
+                  priority: int = 0, src_tier: Optional[str] = None,
+                  tracer=NULL_TRACER) -> PrefetchPlan:
     """Build a PrefetchPlan by simulating chained page flows on the fabric.
 
     ``system`` defaults to the TPU v5e preset (host_dram -> chip0 over
-    PCIe). ``background`` flows (repro.fabric.Flow, tier- or node-named
+    PCIe). ``src_tier`` names the spill tier pages are fetched from
+    (default ``"host"``; ``PagedKVCache.plan_prefetch`` passes the
+    system's own ``kv_tiers`` spill tier so any preset machine works).
+    ``background`` flows (repro.fabric.Flow, tier- or node-named
     endpoints) contend with the prefetch stream for shared links.
     ``weight``/``priority`` are the page flows' DMA QoS class (default:
     egalitarian best-effort; ``PagedKVCache.plan_prefetch`` raises it to
     the pager's deadline-critical class).
+
+    With no pages to fetch the plan is trivially empty — including on a
+    degraded system whose spill tier was hot-removed (an evacuated cache
+    must still schedule; its effective bandwidth reports 0.0).
     """
     from repro.fabric.contention import Flow, effective_bandwidth
     from repro.fabric.sim import simulate
     from repro.fabric.systems import get_system
 
     system = system or get_system("tpu_v5e")
-    src = system.tier_node("host")
     dst = system.compute
-    bg = system.resolve_flows(background)
-    eff = effective_bandwidth(system.fabric, src, dst, bg,
-                              weight=weight, priority=priority)
+    try:
+        src = system.tier_node(src_tier or "host")
+        bg = system.resolve_flows(background)
+        eff = effective_bandwidth(system.fabric, src, dst, bg,
+                                  weight=weight, priority=priority)
+    except ValueError:
+        # spill tier unreachable (hot-removed / dead link): only an empty
+        # plan is schedulable — pages stranded there cannot be fetched
+        if not pages:
+            return PrefetchPlan((), {}, 0.0, 0.0)
+        raise
     if not pages:
         return PrefetchPlan((), {}, 0.0, eff)
     # One in-flight fetch at a time (a single DMA queue): stagger each page

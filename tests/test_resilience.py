@@ -1,0 +1,228 @@
+"""Tests for the degradation reaction loop (repro.runtime.degrade) and
+its substrate: fabric hot-removal, pager re-tiering, detection, recovery."""
+
+import dataclasses
+
+import pytest
+
+from repro.fabric.systems import get_system
+from repro.runtime.degrade import (DegradationDetector, DegradationSchedule,
+                                   DegradedServeConfig, DetectorConfig,
+                                   co_tenant, host_link_degraded,
+                                   link_degrade, run_degraded_serve,
+                                   tier_removed)
+
+
+# -- fabric hot-removal primitive -------------------------------------------
+
+
+def test_without_nodes_removes_node_and_links():
+    base = get_system("tpu_v5e").fabric
+    fab = base.without_nodes(["host_dram"])
+    assert "host_dram" not in fab.nodes
+    assert all("host_dram" not in (a, b) for a, b in fab.links)
+    # surviving routes still work; routes through the node are gone
+    assert fab.route("chip0", "hbm0")
+    with pytest.raises(ValueError):
+        fab.route("chip0", "pool_mem")      # only reachable via host_dram
+
+
+def test_without_nodes_unknown_raises():
+    base = get_system("tpu_v5e").fabric
+    with pytest.raises(ValueError, match="unknown node"):
+        base.without_nodes(["host_dram", "nope"])
+
+
+# -- the degradation schedule ------------------------------------------------
+
+
+def test_schedule_timing_and_stacking():
+    s = DegradationSchedule((
+        link_degrade(3, "chip0", "host_dram", 0.5),
+        link_degrade(5, "chip0", "host_dram", 0.5, until_round=7),
+    ))
+    key = ("chip0", "host_dram")
+    assert s.scales_at(2) == {}
+    assert s.scales_at(3)[key][0] == pytest.approx(0.5)
+    assert s.scales_at(5)[key][0] == pytest.approx(0.25)   # stacked
+    assert s.scales_at(7)[key][0] == pytest.approx(0.5)    # one cleared
+    assert s.first_event_round == 3
+
+
+def test_degraded_system_rescales_and_restores():
+    base = get_system("tpu_v5e")
+    s = host_link_degraded(at_round=2, factor=0.5)
+    assert s.degraded_system(base, 1) is base              # untouched
+    deg = s.degraded_system(base, 2)
+    nominal = base.fabric.link("host_dram", "chip0").bandwidth
+    assert deg.fabric.link("host_dram", "chip0").bandwidth == \
+        pytest.approx(0.5 * nominal)
+
+
+def test_degraded_system_tier_removal():
+    base = get_system("tpu_v5e")
+    s = DegradationSchedule((tier_removed(1, "host"),))
+    deg = s.degraded_system(base, 1)
+    assert deg.kv_tiers is None
+    assert "host" not in deg.tier_map
+    with pytest.raises(ValueError):
+        deg.tier_node("host")
+    # removing the fast tier is not survivable
+    s2 = DegradationSchedule((tier_removed(1, "hbm"),))
+    with pytest.raises(ValueError, match="not survivable"):
+        s2.degraded_system(base, 1)
+
+
+def test_schedule_validates_event_targets():
+    base = get_system("tpu_v5e")
+    with pytest.raises(ValueError, match="unknown link"):
+        DegradationSchedule((link_degrade(0, "chip0", "hbm1", 0.5),)
+                            ).degraded_system(base, 0)
+    with pytest.raises(ValueError, match="unknown tier"):
+        DegradationSchedule((tier_removed(0, "nvram"),)
+                            ).degraded_system(base, 0)
+
+
+# -- pager re-tiering --------------------------------------------------------
+
+
+def _filled_cache(weights=(1, 1)):
+    import jax.numpy as jnp
+
+    from repro.serving.pager import PagedKVCache, PagerConfig
+    cache = PagedKVCache(PagerConfig(page_size=8, n_pages=16, kv_heads=2,
+                                     head_dim=4, weights=weights))
+    cache.allocate(0)
+    kv = jnp.arange(64 * 2 * 4, dtype=jnp.bfloat16).reshape(64, 2, 4)
+    cache.append(0, kv, kv)
+    return cache, kv
+
+
+def test_retier_preserves_values_through_migration():
+    import jax.numpy as jnp
+    cache, kv = _filled_cache(weights=(1, 1))
+    cache.spill_cold_pages()
+    before = jnp.asarray(cache.k_pool)  # pre-spill live copy reference
+    info = cache.retier([1, 0])         # evacuate: everything fast
+    assert info["migrated"] and info["to_fast"] > 0
+    assert not cache._host_mask.any()
+    assert cache.host_pages([0]) == []
+    assert jnp.allclose(jnp.asarray(cache.k_pool), before)
+    assert cache.cfg.weights == (1, 0)
+
+
+def test_retier_relabel_without_spill_is_free():
+    cache, _ = _filled_cache(weights=(1, 0))
+    info = cache.retier([1, 1])         # no spilled data: pure relabel
+    assert not info["migrated"]
+    assert info["to_slow"] > 0
+    assert cache._host_mask.any()
+    # the lazily-created host shadow exists for the next spill
+    assert hasattr(cache, "k_pool_host")
+    assert cache.spill_cold_pages() > 0
+
+
+def test_prefetch_empty_plan_on_removed_tier():
+    cache, _ = _filled_cache(weights=(1, 1))
+    cache.retier([1, 0])
+    base = get_system("tpu_v5e")
+    deg = DegradationSchedule((tier_removed(0, "host"),)
+                              ).degraded_system(base, 0)
+    plan = cache.plan_prefetch([0], system=deg)
+    assert plan.order == () and plan.total_time == 0.0
+
+
+# -- detection ---------------------------------------------------------------
+
+
+def test_detector_no_false_positive_when_healthy():
+    det = DegradationDetector(1e-3, DetectorConfig(patience=2))
+    for r in range(20):
+        assert not det.observe(r, r * 1e-3, 1.05e-3,
+                               step_times=(1e-4,) * 6)
+    assert det.detect_round is None
+
+
+def test_detector_patience_path():
+    det = DegradationDetector(1e-3, DetectorConfig(patience=2,
+                                                   min_samples=100))
+    # min_samples=100 mutes the straggler signal: drift alone must fire
+    # only after `patience` consecutive drifting rounds
+    assert not det.observe(0, 0.0, 2e-3)
+    assert det.observe(1, 1e-3, 2e-3)
+    assert det.detect_round == 1
+    # sticky: a healthy-looking round later doesn't clear it
+    assert det.observe(2, 2e-3, 1e-3)
+
+
+def test_detector_drift_resets_on_healthy_round():
+    det = DegradationDetector(1e-3, DetectorConfig(patience=2,
+                                                   min_samples=100))
+    assert not det.observe(0, 0.0, 2e-3)
+    assert not det.observe(1, 1e-3, 1e-3)   # recovered: streak resets
+    assert not det.observe(2, 2e-3, 2e-3)   # a fresh single drift: no fire
+    assert det.detect_round is None
+
+
+def test_detector_hard_fail_fires_immediately():
+    det = DegradationDetector(1e-3, DetectorConfig(patience=5))
+    assert det.observe(3, 0.0, None, hard_fail=True)
+    assert det.detect_round == 3
+
+
+# -- the loop end to end -----------------------------------------------------
+
+
+_FAST_CFG = DegradedServeConfig(requests=4, prompt=512, gen=8, rounds=10)
+
+
+def test_degraded_serve_headline_recovers():
+    sched = host_link_degraded(at_round=3)
+    react = run_degraded_serve(sched, cfg=_FAST_CFG, react=True)
+    base = run_degraded_serve(sched, cfg=_FAST_CFG, react=False)
+    assert react.detect_round is not None
+    assert react.detect_latency_rounds <= 3
+    assert react.recovery_frac >= 0.8
+    assert react.violations_total < base.violations_total
+    assert base.recover_round is None       # the baseline stays degraded
+    assert base.recovery_frac < 0.8
+    # report is JSON-clean
+    import json
+    json.dumps(react.to_json())
+
+
+def test_degraded_serve_hot_removal_evacuates():
+    sched = DegradationSchedule((tier_removed(3, "host"),))
+    react = run_degraded_serve(sched, cfg=_FAST_CFG, react=True)
+    base = run_degraded_serve(sched, cfg=_FAST_CFG, react=False)
+    assert react.detect_round == 3          # hard failure: same round
+    assert react.recovery_frac >= 0.8
+    # the evacuation replanned to everything-fast
+    act = next(r.action for r in react.rounds if r.action)
+    assert act["weights"] == (1, 0)
+    # the baseline flatlines: stranded pages, zero throughput
+    assert base.during_min_tput == 0.0
+    assert base.violations_total > react.violations_total
+
+
+def test_degraded_serve_co_tenant():
+    from repro.fabric.contention import Flow
+    sched = DegradationSchedule((
+        co_tenant(3, Flow("noisy", "host", "hbm", nbytes=0),
+                  until_round=8),))
+    react = run_degraded_serve(sched, cfg=_FAST_CFG, react=True)
+    assert react.recovery_frac >= 0.8
+    assert react.violations_total == 0      # QoS re-class rides it out
+
+
+def test_degraded_serve_emits_resilience_obs():
+    from repro.obs import Tracer
+    tr = Tracer()
+    run_degraded_serve(host_link_degraded(at_round=3), cfg=_FAST_CFG,
+                       react=True, tracer=tr)
+    names = {e.name for e in tr.events}
+    assert {"resilience.detect", "resilience.recover",
+            "resilience.drift"} <= names
+    gauges = tr.metrics.to_json()["gauges"]
+    assert gauges["resilience.detect_round"] == 3
+    assert "resilience.recovery_frac" in gauges

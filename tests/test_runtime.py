@@ -1,0 +1,230 @@
+"""Tests for repro.runtime.fault and repro.runtime.elastic — the
+satellite coverage ISSUE 7 calls out (previously zero beyond smoke)."""
+
+import threading
+
+import pytest
+
+from repro.runtime.elastic import (degraded_tier_bandwidths, plan_mesh,
+                                   replan, replan_interleave)
+from repro.runtime.fault import (HostFailure, StepSupervisor, StepTimeout,
+                                 StragglerStats, retry_with_checkpoint)
+
+
+# -- StragglerStats ---------------------------------------------------------
+
+
+def test_straggler_min_samples_boundary():
+    s = StragglerStats(min_samples=10)
+    for _ in range(8):
+        s.record(0.1)
+    s.record(10.0)                      # 9 samples, huge tail
+    assert not s.inflated               # below min_samples: never fires
+    s.record(0.1)                       # 10th sample
+    assert s.inflated                   # at the boundary it can fire
+
+
+def test_straggler_even_window_median():
+    # bimodal even-length window: true median averages the middle pair
+    # (0.1+100)/2 -> p95/median ~2 > 1.5. The old upper-middle pick made
+    # the median 100 and p95/median == 1, masking a real 1000x tail.
+    s = StragglerStats(window=10, min_samples=10)
+    for _ in range(5):
+        s.record(0.1)
+    for _ in range(5):
+        s.record(100.0)
+    assert s.inflated
+    m = s.summary()
+    assert m["median_s"] == pytest.approx(50.05)
+    assert m["n"] == 10 and m["inflated"]
+
+
+def test_straggler_window_slides():
+    s = StragglerStats(window=10, min_samples=10)
+    for _ in range(10):
+        s.record(5.0)                   # old slow regime
+    for _ in range(10):
+        s.record(0.1)                   # recovered: window fully rolls
+    assert not s.inflated
+    assert s.summary()["median_s"] == pytest.approx(0.1)
+
+
+# -- StepSupervisor ---------------------------------------------------------
+
+
+def test_supervisor_fake_clock_measures_dt():
+    ticks = iter([0.0, 1.5, 10.0, 10.25])
+    sup = StepSupervisor(min_timeout=60.0, clock=lambda: next(ticks))
+    out, dt = sup.run(lambda: "ok")
+    assert out == "ok" and dt == pytest.approx(1.5)
+    assert sup.times == [pytest.approx(1.5)]
+    _, dt2 = sup.run(lambda: "ok")      # second step uses the next pair
+    assert dt2 == pytest.approx(0.25)
+
+
+def test_supervisor_timeout_cancels_cooperative_thunk():
+    witnessed = {}
+
+    def thunk(cancel=None):
+        cancel.wait(10.0)
+        witnessed["cancelled"] = cancel.is_set()
+
+    sup = StepSupervisor(min_timeout=0.1, cancel_grace=2.0)
+    with pytest.raises(StepTimeout) as ei:
+        sup.run(thunk)
+    # no fabricated "median 0.0s": an empty history says so
+    assert "no step history yet" in str(ei.value)
+    assert witnessed.get("cancelled") is True
+
+
+def test_supervisor_timeout_message_reports_history():
+    ticks = iter([0.0, 2.0, 100.0, 200.0])
+    sup = StepSupervisor(timeout_factor=1.0, min_timeout=0.05,
+                         clock=lambda: next(ticks), cancel_grace=0.0)
+    sup.run(lambda: None)               # dt = 2.0 into history
+    ev = threading.Event()
+    with pytest.raises(StepTimeout) as ei:
+        sup.run(ev.wait)                # blocks past the 2s-median timeout
+    ev.set()
+    assert "trailing median 2.0s over 1 steps" in str(ei.value)
+
+
+def test_supervisor_reraises_thunk_error():
+    sup = StepSupervisor(min_timeout=5.0)
+    with pytest.raises(ZeroDivisionError):
+        sup.run(lambda: 1 / 0)
+    assert sup.times == []              # a failed step leaves no sample
+
+
+# -- retry_with_checkpoint --------------------------------------------------
+
+
+class _QuickSupervisor(StepSupervisor):
+    """Runs the thunk inline — retry tests need determinism, not threads."""
+
+    def run(self, fn, *args):
+        return fn(*args), 0.0
+
+
+def test_retry_does_not_launder_programming_bugs():
+    restores = []
+
+    def step(state):
+        raise RuntimeError("index out of bounds")
+
+    runner = retry_with_checkpoint(step, lambda: restores.append(1) or 0,
+                                   supervisor=_QuickSupervisor())
+    with pytest.raises(RuntimeError):
+        runner(0)
+    assert restores == []               # no restore, no retry
+
+
+def test_retry_environmental_with_capped_backoff():
+    sleeps = []
+    calls = {"n": 0}
+
+    def step(state):
+        calls["n"] += 1
+        if calls["n"] <= 3:
+            raise HostFailure("preempted")
+        return state + 1
+
+    runner = retry_with_checkpoint(
+        step, lambda: 10, max_retries=3, supervisor=_QuickSupervisor(),
+        backoff_base=1.0, backoff_cap=3.0, sleep=sleeps.append)
+    out, _ = runner(10)
+    assert out == 11
+    assert sleeps == [1.0, 2.0, 3.0]    # 1, 2, 4 capped at 3
+
+
+def test_retry_exhausts_then_raises():
+    sleeps = []
+
+    def step(state):
+        raise StepTimeout("stuck")
+
+    runner = retry_with_checkpoint(
+        step, lambda: 0, max_retries=2, supervisor=_QuickSupervisor(),
+        sleep=sleeps.append)
+    with pytest.raises(StepTimeout):
+        runner(0)
+    assert len(sleeps) == 2             # backoff between, not after, tries
+
+
+def test_retry_opt_in_retryable():
+    calls = {"n": 0}
+
+    def step(state):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise ConnectionError("transient rpc")
+        return state
+
+    runner = retry_with_checkpoint(
+        step, lambda: 7, supervisor=_QuickSupervisor(),
+        retryable=(ConnectionError,), sleep=lambda s: None)
+    out, _ = runner(0)
+    assert out == 7                     # restored state, then succeeded
+
+
+# -- elastic: mesh replanning ----------------------------------------------
+
+
+def test_plan_mesh_shrink_decisions():
+    assert plan_mesh(12) == (12, 1)     # 16 -> 8 -> 4 ... none divide 12
+    assert plan_mesh(48) == (3, 16)
+    assert plan_mesh(1) == (1, 1)
+    assert plan_mesh(24, prefer_model=8) == (3, 8)
+
+
+def test_replan_batch_rounding():
+    from repro.config.base import get_config, get_shape
+    cfg = get_config("yi-9b")
+    shape = get_shape("train_4k")
+    d = replan(cfg, shape, 12, prev_global_batch=100)
+    assert d.mesh_shape == (12, 1)
+    assert d.global_batch == 96         # (100 // 12) * 12
+    d2 = replan(cfg, shape, 12, prev_global_batch=5)
+    assert d2.global_batch == 12        # never below one seq per shard
+
+
+# -- elastic: serving-side interleave replanning ----------------------------
+
+
+def test_replan_interleave_shifts_on_degraded_link():
+    from repro.fabric.systems import get_system
+    base = get_system("dual_socket_cxl")
+    healthy = replan_interleave(base)
+    # kill the CXL link to 1% of nominal: the spill tier's share collapses
+    sick = base.fabric.rescaled({("cxl_exp", "socket0"): (0.01, 1.0)})
+    import dataclasses
+    degraded = dataclasses.replace(base, fabric=sick)
+    after = replan_interleave(degraded)
+    frac = lambda w: w[0] / (w[0] + w[1])  # noqa: E731
+    assert frac(after) > frac(healthy)
+
+
+def test_replan_interleave_evacuates_removed_tier():
+    import dataclasses
+    from repro.fabric.systems import get_system
+    base = get_system("tpu_v5e")
+    fab = base.fabric.without_nodes(["host_dram"])
+    tm = {k: v for k, v in base.tier_map.items() if v != "host_dram"}
+    degraded = dataclasses.replace(base, fabric=fab, tier_map=tm,
+                                   kv_tiers=None)
+    assert replan_interleave(degraded) == [1, 0]
+    bws = degraded_tier_bandwidths(
+        dataclasses.replace(degraded, kv_tiers=("hbm", "host")))
+    assert bws["host"] == 0.0 and bws["hbm"] > 0
+
+
+def test_replan_interleave_capacity_clip():
+    from repro.fabric.systems import get_system
+    base = get_system("tpu_v5e")
+    # HBM >> PCIe: pure bandwidth optimum is everything-fast, but a 0.75
+    # fast budget forces a minimal spill stripe
+    assert replan_interleave(base) == [1, 0]
+    assert replan_interleave(base, fast_budget_frac=0.75) == [3, 1]
+    assert replan_interleave(base, fast_budget_frac=0.5) == [1, 1]
+    with pytest.raises(ValueError):
+        replan_interleave(base, fast_budget_frac=0.0)
