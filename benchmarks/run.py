@@ -24,6 +24,7 @@ import traceback
 def _families():
     from repro.heimdall.apps import ALL_APPS
     from repro.heimdall.calibration import ALL_CALIBRATION
+    from repro.heimdall.disagg import ALL_DISAGG
     from repro.heimdall.interference import ALL_INTERFERENCE
     from repro.heimdall.kv_quant import ALL_KV_QUANT
     from repro.heimdall.micro import ALL_MICRO
@@ -37,6 +38,7 @@ def _families():
             "calibration": list(ALL_CALIBRATION),
             "obs": list(ALL_OBS),
             "resilience": list(ALL_RESILIENCE),
+            "disagg": list(ALL_DISAGG),
             "apps": list(ALL_APPS)}
 
 
@@ -57,10 +59,14 @@ def _summary_fn(family: str):
     if family == "resilience":
         from repro.heimdall.resilience import resilience_summary
         return resilience_summary
+    if family == "disagg":
+        from repro.heimdall.disagg import disagg_summary
+        return disagg_summary
     return None
 
 
-SUMMARIZABLE = ("kv_quant", "qos", "calibration", "obs", "resilience")
+SUMMARIZABLE = ("kv_quant", "qos", "calibration", "obs", "resilience",
+                "disagg")
 
 
 def main() -> None:
@@ -70,7 +76,7 @@ def main() -> None:
     ap.add_argument("--families", default=None,
                     help="comma-separated families to run "
                          "(micro,interference,kv_quant,qos,calibration,"
-                         "obs,resilience,apps); default: all minus "
+                         "obs,resilience,disagg,apps); default: all minus "
                          "--skip-* flags")
     ap.add_argument("--json-out", default=None,
                     help="write the selected summarizable family's JSON "
@@ -86,6 +92,7 @@ def main() -> None:
     ap.add_argument("--skip-calibration", action="store_true")
     ap.add_argument("--skip-obs", action="store_true")
     ap.add_argument("--skip-resilience", action="store_true")
+    ap.add_argument("--skip-disagg", action="store_true")
     args = ap.parse_args()
 
     fams = _families()
@@ -104,13 +111,15 @@ def main() -> None:
                    + ([] if args.skip_calibration else fams["calibration"])
                    + ([] if args.skip_obs else fams["obs"])
                    + ([] if args.skip_resilience else fams["resilience"])
+                   + ([] if args.skip_disagg else fams["disagg"])
                    + ([] if args.skip_apps else fams["apps"]))
         selected_summaries = [
             f for f, skipped in (("kv_quant", args.skip_kv_quant),
                                  ("qos", args.skip_qos),
                                  ("calibration", args.skip_calibration),
                                  ("obs", args.skip_obs),
-                                 ("resilience", args.skip_resilience))
+                                 ("resilience", args.skip_resilience),
+                                 ("disagg", args.skip_disagg))
             if not skipped]
     if args.json_out and len(selected_summaries) != 1:
         sys.exit("--json-out writes one family's JSON summary; select "

@@ -186,10 +186,11 @@ def transfer_time(nbytes: int, topo, src: str, dst: str, *,
     """
     if compression <= 0:
         raise ValueError(f"compression must be > 0, got {compression}")
-    wire = nbytes / compression
     if hasattr(topo, "route_bandwidth"):           # fabric-routed path
-        return (wire / topo.route_bandwidth(src, dst)
-                + topo.route_latency(src, dst))
+        from repro.transport import Route
+        return Route.resolve(topo, src, dst).transfer_time(
+            nbytes, compression=compression)
+    wire = nbytes / compression
     return wire / topo.link_bw(src, dst) + topo.link_latency(src, dst)
 
 
@@ -211,13 +212,7 @@ def contended_transfer_time(nbytes: int, system, src: str, dst: str,
     instead of splitting it; a starved (lower-priority) transfer gets
     ``inf`` — in steady state it never completes.
     """
-    if compression <= 0:
-        raise ValueError(f"compression must be > 0, got {compression}")
-    from repro.fabric.contention import effective_bandwidth
-    s, d = system.tier_node(src), system.tier_node(dst)
-    bw = effective_bandwidth(system.fabric, s, d,
-                             system.resolve_flows(background),
-                             weight=weight, priority=priority)
-    if bw <= 0:
-        return math.inf
-    return nbytes / compression / bw + system.fabric.route_latency(s, d)
+    from repro.transport import Route
+    return Route.resolve(system, src, dst).contended_transfer_time(
+        nbytes, background, compression=compression, weight=weight,
+        priority=priority)

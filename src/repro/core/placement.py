@@ -194,13 +194,13 @@ def contended_tier_bandwidths(system, background: Sequence = (), *,
     Probes each compute->tier route with QoS-aware max-min fair sharing
     against the background (``weight``/``priority`` are the probe's DMA
     class); with no background this equals the routed bottleneck bandwidth
-    ``TierTopology.from_fabric`` reports.
+    ``TierTopology.from_fabric`` reports. Thin wrapper over
+    ``repro.transport.probe_tier_bandwidths`` (strict form: unknown tiers
+    and dead routes raise; the elastic replanner uses the tolerant form).
     """
-    from repro.fabric.contention import effective_bandwidth
-    bg = system.resolve_flows(background)
-    return {tier: effective_bandwidth(system.fabric, node, system.compute,
-                                      bg, weight=weight, priority=priority)
-            for tier, node in system.tier_map.items()}
+    from repro.transport import probe_tier_bandwidths
+    return probe_tier_bandwidths(system, background, weight=weight,
+                                 priority=priority)
 
 
 def _plan_kv_fabric(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,

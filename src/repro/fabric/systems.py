@@ -47,6 +47,10 @@ class System:
     tier_map: dict
     kv_tiers: Optional[tuple] = None      # (fast_tier, spill_tier)
     description: str = ""
+    # where the link constants came from: "nominal" datasheet presets or a
+    # "calibrated" fit (from_profile) — transport.Route carries this so
+    # every cost/ETA downstream can say what it rests on
+    provenance: str = "nominal"
 
     def tier_node(self, tier_or_node: str) -> str:
         """Resolve a tier name (or raw node name) to a fabric node."""
@@ -77,6 +81,13 @@ class System:
     def route_latency(self, src: str, dst: str) -> float:
         return self.fabric.route_latency(self.tier_node(src),
                                          self.tier_node(dst))
+
+    def compute_nodes(self) -> list[str]:
+        """All compute-kind node names, sorted (``compute`` is the
+        reference; the rest are candidates for disaggregated roles)."""
+        from repro.fabric.topology import NodeKind
+        return sorted(n.name for n in self.fabric.nodes.values()
+                      if n.kind is NodeKind.COMPUTE)
 
 
 # --------------------------------------------------------------------------
@@ -284,7 +295,7 @@ def from_profile(profile, preset: Optional[str] = None) -> System:
         scales[key] = (bw, lat)
     fab = base.fabric.rescaled(scales, name=f"{base.name}+calibrated")
     return dataclasses.replace(
-        base, fabric=fab,
+        base, fabric=fab, provenance="calibrated",
         description=f"{base.description} (calibrated from "
                     f"{len(profile.links)} fitted routes, "
                     f"source={profile.source})")

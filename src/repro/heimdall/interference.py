@@ -11,7 +11,7 @@ Run via ``benchmarks/run.py`` (names all start with ``interference_``).
 
 from __future__ import annotations
 
-from repro.fabric.contention import Flow, effective_bandwidth
+from repro.fabric.contention import Flow
 from repro.fabric.scenarios import (bidirectional_fight,
                                     noisy_neighbor_pool,
                                     offload_vs_prefetch)
@@ -89,11 +89,13 @@ def interference_bidirectional() -> list:
 def interference_loaded_bandwidth() -> list:
     """Effective probe bandwidth chip->host under 0..3 background streams
     (the Fig 6-style loaded curve, per-flow rather than per-tier)."""
+    from repro.transport import Route
     rows = []
     s = get_system("tpu_v5e")
+    route = Route.resolve(s, "host_dram", "chip0")
     for n_bg in (0, 1, 2, 3):
         bg = [Flow(f"bg{i}", "host_dram", "chip0") for i in range(n_bg)]
-        bw = effective_bandwidth(s.fabric, "host_dram", "chip0", bg)
+        bw = route.effective_bandwidth(bg)
         rows.append(Row(f"interference_loaded_bw/bg={n_bg}", 0.0,
                         f"GiB_s={bw / GiB:.2f}"))
     return rows

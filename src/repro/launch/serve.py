@@ -18,6 +18,14 @@ pager's int8 cold tier the pages land ~2x sooner, which is exactly the win
 
   PYTHONPATH=src python -m repro.launch.serve --paged-sim \
       [--system tpu_v5e] [--requests 8] [--gen 32]
+
+``--disagg-sim`` splits the engine's two roles across compute nodes:
+prefill on one host, decode on another, KV pages shipped over the
+contended fabric route ``repro.serving.disagg`` picks via the transport
+layer — the disaggregated generalization of the same overlap story:
+
+  PYTHONPATH=src python -m repro.launch.serve --disagg-sim \
+      --system cxl_pool [--kv-dtype int8] [--trace-out disagg.json]
 """
 
 from __future__ import annotations
@@ -89,7 +97,16 @@ class ServeEngine:
             return put_tree(self.params_home, "device")
         return self.params_home
 
-    def serve(self, requests: list[Request]) -> list[Result]:
+    def prefill(self, requests: list[Request]) -> "PrefillHandoff":
+        """The prefill role: run the prompt pass and hand off everything
+        the decode role needs (KV cache, first tokens, step offsets).
+
+        In a disaggregated deployment this runs on the prefill compute
+        node and the returned handoff's KV pages are what crosses the
+        fabric to the decode node (``repro.serving.disagg`` costs exactly
+        that shipment); monolithic ``serve`` just passes it to ``decode``
+        in-process.
+        """
         B = len(requests)
         tracer = self.tracer
         plen = max(len(r.prompt) for r in requests)
@@ -112,17 +129,25 @@ class ServeEngine:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             jax.block_until_ready(tok)
         prefill_ms = (time.perf_counter() - t0) * 1e3
+        return PrefillHandoff(requests, cache, tok, plen, max_new,
+                              prefill_ms)
 
+    def decode(self, handoff: "PrefillHandoff") -> list[Result]:
+        """The decode role: step the handed-off KV cache to completion."""
+        requests = handoff.requests
+        B = len(requests)
+        tracer = self.tracer
+        cache, tok = handoff.cache, handoff.tok
         outs = [[] for _ in requests]
         t0 = time.perf_counter()
-        for s in range(max_new):
+        for s in range(handoff.max_new):
             ts = time.perf_counter()
             with tracer.span("serve.decode_step",
                              track=("serving", "engine"), cat="serve",
                              step=s, batch=B):
                 params = self._params()
                 logits, cache = self._decode(params, cache, tok,
-                                             jnp.int32(plen + s))
+                                             jnp.int32(handoff.plen + s))
                 tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 # one device read for the whole batch, not B scalar reads
                 tok_host = np.asarray(tok)
@@ -132,18 +157,37 @@ class ServeEngine:
             for i in range(B):
                 outs[i].append(int(tok_host[i, 0]))
         jax.block_until_ready(tok)
-        ms_per_tok = (time.perf_counter() - t0) * 1e3 / max_new
+        ms_per_tok = (time.perf_counter() - t0) * 1e3 / handoff.max_new
         if tracer.enabled:
             m = tracer.metrics
             m.add("serve.requests", B)
-            m.add("serve.decode_steps", max_new)
-            m.add("serve.tokens_generated", B * max_new)
-            m.set("serve.prefill_ms", prefill_ms)
+            m.add("serve.decode_steps", handoff.max_new)
+            m.add("serve.tokens_generated", B * handoff.max_new)
+            m.set("serve.prefill_ms", handoff.prefill_ms)
             m.set("serve.decode_ms_per_tok", ms_per_tok)
             for k, v in self.straggler.summary().items():
                 m.set(f"serve.straggler.{k}", v)
-        return [Result(r.rid, outs[i][:r.max_new], prefill_ms, ms_per_tok)
+        return [Result(r.rid, outs[i][:r.max_new], handoff.prefill_ms,
+                       ms_per_tok)
                 for i, r in enumerate(requests)]
+
+    def serve(self, requests: list[Request]) -> list[Result]:
+        """Monolithic serving: prefill role then decode role, in-process
+        (the synchronous-handoff special case of disaggregation)."""
+        return self.decode(self.prefill(requests))
+
+
+@dataclasses.dataclass
+class PrefillHandoff:
+    """What the prefill role produces and the decode role consumes — the
+    unit that crosses the fabric when the roles live on different compute
+    nodes."""
+    requests: list               # the Requests this batch covers
+    cache: object                # model KV cache (decode steps donate it)
+    tok: jax.Array               # (B, 1) first sampled tokens
+    plen: int                    # padded prompt length (step offset base)
+    max_new: int
+    prefill_ms: float
 
 
 # --------------------------------------------------------------------------
@@ -244,80 +288,96 @@ class DecodeScheduler:
                                         weight=self.weight,
                                         priority=self.priority)
         ready = self.ready_times(seq_ids, plan)
-        remaining = {s: n_steps for s in seq_ids}
-        admit: dict = {}
-        finish: dict = {}
-        steps = []
-        t = min(ready.values()) if ready else 0.0
-        k = 0
-        tracer = self.tracer
-        traced = tracer.enabled
-        while any(r > 0 for r in remaining.values()):
-            resident = set(plan.ready_by(t))
-            active = tuple(s for s in seq_ids
-                           if remaining[s] > 0 and ready[s] <= t)
-            if not active:                  # idle until the next arrival
-                t = min(ready[s] for s in seq_ids if remaining[s] > 0)
-                continue
-            for s in active:
-                if s not in admit:
-                    admit[s] = t
-                    if traced:
-                        # slack: how long the sequence sat decode-ready
-                        # (pages landed at ready[s]) before the step grid
-                        # admitted it — deadline-alignment cost, not fabric
-                        tracer.instant(
-                            "sched.admit", ts=t,
-                            track=("scheduler", "admissions"), cat="sched",
-                            seq=s, ready=ready[s],
-                            deadline_slack=t - ready[s])
-                        tracer.async_begin(
-                            f"seq{s}", id=f"seq{s}", ts=t,
-                            track=("scheduler", "requests"), cat="sched",
-                            seq=s, n_steps=n_steps)
-                remaining[s] -= 1
-                if remaining[s] == 0:
-                    finish[s] = t + self.step_time
-                    if traced:
-                        tracer.async_end(
-                            f"seq{s}", id=f"seq{s}", ts=finish[s],
-                            track=("scheduler", "requests"), cat="sched",
-                            completion=finish[s])
-            steps.append(DecodeStep(k, t, active, len(resident)))
-            if traced:
-                tracer.begin("sched.step", ts=t,
-                             track=("scheduler", "steps"), cat="sched",
-                             step=k, batch=len(active),
-                             pages_resident=len(resident))
-                tracer.end("sched.step", ts=t + self.step_time,
-                           track=("scheduler", "steps"), cat="sched")
-            k += 1
-            t += self.step_time
-        makespan = max(finish.values()) if finish else 0.0
-        sync = plan.total_time + n_steps * self.step_time
-        violations = {}
-        if deadlines:
-            for s, dl in deadlines.items():
-                done = finish.get(s)
-                if done is not None and done > dl:
-                    violations[s] = done - dl
-        sched = DecodeSchedule(tuple(steps), admit, finish, makespan, sync,
-                               plan.total_time, self.step_time, violations)
+        return admission_schedule(ready, plan, n_steps, self.step_time,
+                                  deadlines=deadlines, tracer=self.tracer)
+
+
+def admission_schedule(ready: dict, plan, n_steps: int, step_time: float,
+                       *, deadlines: Optional[dict] = None,
+                       tracer=NULL_TRACER) -> DecodeSchedule:
+    """The deadline-aware admission loop itself, plan-agnostic.
+
+    ``ready`` maps seq id -> sim time its pages are fully resident (dict
+    order is the admission preference order); ``plan`` is anything with
+    ``ready_by(t)`` and ``total_time`` — a pager ``PrefetchPlan`` or a
+    transport ``TransferPlan`` (the disaggregated prefill->decode shipment
+    reuses this loop unchanged: pages landing over the cross-host route
+    admit sequences exactly like host->HBM prefetches do).
+    """
+    seq_ids = list(ready)
+    remaining = {s: n_steps for s in seq_ids}
+    admit: dict = {}
+    finish: dict = {}
+    steps = []
+    t = min(ready.values()) if ready else 0.0
+    k = 0
+    traced = tracer.enabled
+    while any(r > 0 for r in remaining.values()):
+        resident = set(plan.ready_by(t))
+        active = tuple(s for s in seq_ids
+                       if remaining[s] > 0 and ready[s] <= t)
+        if not active:                  # idle until the next arrival
+            t = min(ready[s] for s in seq_ids if remaining[s] > 0)
+            continue
+        for s in active:
+            if s not in admit:
+                admit[s] = t
+                if traced:
+                    # slack: how long the sequence sat decode-ready
+                    # (pages landed at ready[s]) before the step grid
+                    # admitted it — deadline-alignment cost, not fabric
+                    tracer.instant(
+                        "sched.admit", ts=t,
+                        track=("scheduler", "admissions"), cat="sched",
+                        seq=s, ready=ready[s],
+                        deadline_slack=t - ready[s])
+                    tracer.async_begin(
+                        f"seq{s}", id=f"seq{s}", ts=t,
+                        track=("scheduler", "requests"), cat="sched",
+                        seq=s, n_steps=n_steps)
+            remaining[s] -= 1
+            if remaining[s] == 0:
+                finish[s] = t + step_time
+                if traced:
+                    tracer.async_end(
+                        f"seq{s}", id=f"seq{s}", ts=finish[s],
+                        track=("scheduler", "requests"), cat="sched",
+                        completion=finish[s])
+        steps.append(DecodeStep(k, t, active, len(resident)))
         if traced:
-            m = tracer.metrics
-            m.add("sched.steps", len(steps))
-            m.add("sched.sequences", len(seq_ids))
-            m.set("sched.makespan_s", makespan)
-            m.set("sched.mean_completion_s", sched.mean_completion)
-            m.set("sched.prefetch_total_s", plan.total_time)
-            if deadlines:
-                m.add("sched.deadline_violations", len(violations))
-                for s, over in violations.items():
-                    tracer.instant("sched.deadline_miss",
-                                   ts=finish[s],
-                                   track=("scheduler", "admissions"),
-                                   cat="sched", seq=s, overrun_s=over)
-        return sched
+            tracer.begin("sched.step", ts=t,
+                         track=("scheduler", "steps"), cat="sched",
+                         step=k, batch=len(active),
+                         pages_resident=len(resident))
+            tracer.end("sched.step", ts=t + step_time,
+                       track=("scheduler", "steps"), cat="sched")
+        k += 1
+        t += step_time
+    makespan = max(finish.values()) if finish else 0.0
+    sync = plan.total_time + n_steps * step_time
+    violations = {}
+    if deadlines:
+        for s, dl in deadlines.items():
+            done = finish.get(s)
+            if done is not None and done > dl:
+                violations[s] = done - dl
+    sched = DecodeSchedule(tuple(steps), admit, finish, makespan, sync,
+                           plan.total_time, step_time, violations)
+    if traced:
+        m = tracer.metrics
+        m.add("sched.steps", len(steps))
+        m.add("sched.sequences", len(seq_ids))
+        m.set("sched.makespan_s", makespan)
+        m.set("sched.mean_completion_s", sched.mean_completion)
+        m.set("sched.prefetch_total_s", plan.total_time)
+        if deadlines:
+            m.add("sched.deadline_violations", len(violations))
+            for s, over in violations.items():
+                tracer.instant("sched.deadline_miss",
+                               ts=finish[s],
+                               track=("scheduler", "admissions"),
+                               cat="sched", seq=s, overrun_s=over)
+    return sched
 
 
 def paired_kv_caches(*, requests: int = 8, tokens: int = 1056,
@@ -442,6 +502,14 @@ def main():
     ap.add_argument("--paged-sim", action="store_true",
                     help="simulated fp16-vs-int8 paged decode scheduling "
                          "report (no model run)")
+    ap.add_argument("--disagg-sim", action="store_true",
+                    help="simulated disaggregated prefill/decode serve: "
+                         "roles on separate compute nodes, KV pages "
+                         "shipped over the contended fabric route the "
+                         "cost model picks (no model run)")
+    ap.add_argument("--kv-dtype", default=None, choices=["int8"],
+                    help="ship pages in the pager's quantized cold-tier "
+                         "layout (--disagg-sim)")
     ap.add_argument("--degrade-sim", action="store_true",
                     help="inject the headline degradation (host link "
                          "halved mid-serve) and report the reacting run "
@@ -489,6 +557,17 @@ def main():
             system_name=args.system, step_us=args.step_us,
             calibration_profile=args.calibration_profile,
             tracer=tracer), indent=2))
+        _flush_obs()
+        return
+
+    if args.disagg_sim:
+        from repro.serving.disagg import DisaggConfig, run_disagg_serve
+        report = run_disagg_serve(
+            DisaggConfig(system=args.system, requests=args.requests,
+                         prompt=args.prompt, gen=args.gen,
+                         step_us=args.step_us, kv_dtype=args.kv_dtype),
+            calibration_profile=args.calibration_profile, tracer=tracer)
+        print(json.dumps(report.to_json(), indent=2))
         _flush_obs()
         return
 

@@ -316,18 +316,21 @@ class RecoveryController:
 
     def _migration_time(self, system, nbytes: int) -> float:
         """Bulk-class time to move ``nbytes`` spill->fast on ``system``
-        (0.0 when nothing moves or no route survives)."""
-        from repro.fabric.contention import effective_bandwidth
+        (0.0 when nothing moves or no route survives) — executed as a
+        one-transfer ``repro.transport`` plan so the migration shows up on
+        the same tracer/metrics surface as every other page movement."""
+        from repro.transport import PageTransfer, Route, plan_transfers
 
         if nbytes <= 0 or system.kv_tiers is None:
             return 0.0
-        try:
-            src = system.tier_node(system.kv_tiers[1])
-            bw = effective_bandwidth(system.fabric, src, system.compute,
-                                     [], weight=1.0, priority=0)
-        except ValueError:
+        route = Route.try_resolve(system, system.kv_tiers[1],
+                                  system.compute)
+        if route is None or route.effective_bandwidth(()) <= 0:
             return 0.0
-        return nbytes / bw if bw > 0 else 0.0
+        plan = plan_transfers(
+            route, (PageTransfer("retier", nbytes),),
+            flow_prefix="migrate_", tracer=self.tracer)
+        return plan.total_time
 
     def react(self, system, rnd: int, t: float,
               background: Sequence = (),

@@ -80,30 +80,16 @@ def degraded_tier_bandwidths(system, background: Sequence = (), *,
     Like ``placement.contended_tier_bandwidths`` but tolerant of
     degradation: a tier whose node was hot-removed (or left unreachable by
     a dead link) reports 0.0 instead of raising — "this tier contributes
-    nothing" is exactly the signal the replanner needs.
+    nothing" is exactly the signal the replanner needs. Thin wrapper over
+    ``repro.transport.probe_tier_bandwidths(tolerant=True)``.
     """
-    from repro.fabric.contention import effective_bandwidth
+    from repro.transport import probe_tier_bandwidths
 
     if system.kv_tiers is None:
         return {}
-    try:
-        bg = system.resolve_flows(background)
-    except ValueError:          # a background flow named a removed tier
-        bg = []
-    out = {}
-    for tier in system.kv_tiers:
-        node = system.tier_map.get(tier)
-        if node is None or node not in system.fabric.nodes:
-            out[tier] = 0.0
-            continue
-        try:
-            out[tier] = effective_bandwidth(system.fabric, node,
-                                            system.compute, bg,
-                                            weight=weight,
-                                            priority=priority)
-        except ValueError:      # no route survives the degradation
-            out[tier] = 0.0
-    return out
+    return probe_tier_bandwidths(system, background, weight=weight,
+                                 priority=priority,
+                                 tiers=system.kv_tiers, tolerant=True)
 
 
 def replan_interleave(system, background: Sequence = (), *,

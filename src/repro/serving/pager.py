@@ -81,8 +81,11 @@ class PagedKVCache:
         self.tier_of_page = interleave_pages(cfg.n_pages, list(cfg.weights))
         self.k_pool = place(jnp.zeros(shape, dt), "hbm")
         self.v_pool = place(jnp.zeros(shape, dt), "hbm")
-        # host-resident shadow for pages assigned to the host tier
+        # host-resident shadow for pages assigned to the host tier;
+        # _host_idx is the gather/scatter index list spill/fetch move by
+        # (only those rows, not a full-pool where-merge)
         self._host_mask = self.tier_of_page == 1
+        self._host_idx = np.nonzero(self._host_mask)[0]
         if self._host_mask.any():
             if cfg.kv_dtype == "int8":
                 sshape = (cfg.n_pages, cfg.kv_heads)
@@ -244,20 +247,29 @@ class PagedKVCache:
         n_spilled = int(self._host_mask.sum())
         with self.tracer.span("pager.spill", track=("pager", "tiers"),
                               cat="pager", pages=n_spilled):
-            mask = jnp.asarray(self._host_mask)
-            k_cold = jnp.where(mask[:, None, None, None], self.k_pool, 0)
-            v_cold = jnp.where(mask[:, None, None, None], self.v_pool, 0)
+            # gather only the host-assigned rows — a full-pool
+            # jnp.where temporary would copy (and with int8, quantize)
+            # every HBM page just to move a few cold ones
+            idx = jnp.asarray(self._host_idx)
+            k_cold = jnp.take(self.k_pool, idx, axis=0)
+            v_cold = jnp.take(self.v_pool, idx, axis=0)
             if self.cfg.kv_dtype == "int8":
                 from repro.kernels.quant import quantize_pages
                 kq, ks = quantize_pages(k_cold)
                 vq, vs = quantize_pages(v_cold)
-                self.k_pool_host = place(kq, "host")
-                self.v_pool_host = place(vq, "host")
-                self.k_scales_host = place(ks, "host")
-                self.v_scales_host = place(vs, "host")
+                self.k_pool_host = place(
+                    self.k_pool_host.at[idx].set(kq), "host")
+                self.v_pool_host = place(
+                    self.v_pool_host.at[idx].set(vq), "host")
+                self.k_scales_host = place(
+                    self.k_scales_host.at[idx].set(ks), "host")
+                self.v_scales_host = place(
+                    self.v_scales_host.at[idx].set(vs), "host")
             else:
-                self.k_pool_host = place(k_cold, "host")
-                self.v_pool_host = place(v_cold, "host")
+                self.k_pool_host = place(
+                    self.k_pool_host.at[idx].set(k_cold), "host")
+                self.v_pool_host = place(
+                    self.v_pool_host.at[idx].set(v_cold), "host")
         self._spilled = True
         self.tracer.metrics.add("pager.spill.pages", n_spilled, tier="host")
         self.tracer.metrics.add("pager.spill.bytes",
@@ -281,22 +293,26 @@ class PagedKVCache:
         n_pages = int(self._host_mask.sum())
         with self.tracer.span("pager.fetch", track=("pager", "tiers"),
                               cat="pager", pages=n_pages):
-            mask = jnp.asarray(self._host_mask)
+            # gather only the spilled rows from the host shadow, move just
+            # those across the link, and scatter them back into the pool
+            idx = jnp.asarray(self._host_idx)
             if self.cfg.kv_dtype == "int8":
                 from repro.kernels.quant import dequantize_pages
-                kq = place(self.k_pool_host, "hbm")
-                vq = place(self.v_pool_host, "hbm")
-                ks = place(self.k_scales_host, "hbm")
-                vs = place(self.v_scales_host, "hbm")
+                kq = place(jnp.take(self.k_pool_host, idx, axis=0), "hbm")
+                vq = place(jnp.take(self.v_pool_host, idx, axis=0), "hbm")
+                ks = place(jnp.take(self.k_scales_host, idx, axis=0),
+                           "hbm")
+                vs = place(jnp.take(self.v_scales_host, idx, axis=0),
+                           "hbm")
                 k_h = dequantize_pages(kq, ks, out_dtype=self.k_pool.dtype)
                 v_h = dequantize_pages(vq, vs, out_dtype=self.v_pool.dtype)
             else:
-                k_h = place(self.k_pool_host, "hbm")
-                v_h = place(self.v_pool_host, "hbm")
-            self.k_pool = jnp.where(mask[:, None, None, None], k_h,
-                                    self.k_pool)
-            self.v_pool = jnp.where(mask[:, None, None, None], v_h,
-                                    self.v_pool)
+                k_h = place(jnp.take(self.k_pool_host, idx, axis=0),
+                            "hbm")
+                v_h = place(jnp.take(self.v_pool_host, idx, axis=0),
+                            "hbm")
+            self.k_pool = self.k_pool.at[idx].set(k_h)
+            self.v_pool = self.v_pool.at[idx].set(v_h)
         self._quant_pools = None
         self._spilled = False
         self.tracer.metrics.add("pager.fetch.pages", n_pages, tier="host")
@@ -332,6 +348,7 @@ class PagedKVCache:
                 self.fetch_spilled()
             self.tier_of_page = new_assign
             self._host_mask = new_assign == 1
+            self._host_idx = np.nonzero(self._host_mask)[0]
             if self._host_mask.any() and not hasattr(self, "k_pool_host"):
                 shape = (self.cfg.n_pages, self.cfg.page_size,
                          self.cfg.kv_heads, self.cfg.head_dim)
@@ -424,23 +441,33 @@ class PagedKVCache:
         src_tier = None
         if system is not None and getattr(system, "kv_tiers", None):
             src_tier = system.kv_tiers[1]     # the machine's own spill tier
+        # logical page size + kv_dtype wire compression — transport's
+        # PageTransfer vocabulary (wire bytes == host_page_bytes as ever)
         return plan_prefetch(
-            self.host_pages(seq_ids), self.host_page_bytes,
+            self.host_pages(seq_ids), self.page_bytes,
             system=system, background=background,
             weight=self.cfg.prefetch_weight if weight is None else weight,
             priority=(self.cfg.prefetch_priority if priority is None
                       else priority),
             src_tier=src_tier,
+            compression=self.page_bytes / self.host_page_bytes,
             tracer=self.tracer if tracer is None else tracer)
 
 
 @dataclasses.dataclass(frozen=True)
 class PrefetchPlan:
-    """Fabric-simulated prefetch schedule for a set of host-tier pages."""
+    """Fabric-simulated prefetch schedule for a set of host-tier pages.
+
+    A thin page-id-keyed view over ``repro.transport.TransferPlan`` (kept
+    as the pager's stable vocabulary); the underlying plan — route,
+    per-transfer wire bytes, deadline accounting — rides along as
+    ``transfer_plan`` when one was built.
+    """
     order: tuple                 # page ids in fetch order
     eta: dict                    # page id -> estimated arrival time (s)
     total_time: float            # when the last page lands (s)
     effective_bw: float          # contended link bandwidth used (bytes/s)
+    transfer_plan: Optional[object] = None   # transport.TransferPlan
 
     def ready_by(self, deadline: float) -> list[int]:
         """Pages resident if the decode step fires at `deadline`."""
@@ -450,8 +477,11 @@ class PrefetchPlan:
 def plan_prefetch(pages: list, page_bytes: int, system=None,
                   background: tuple = (), weight: float = 1.0,
                   priority: int = 0, src_tier: Optional[str] = None,
-                  tracer=NULL_TRACER) -> PrefetchPlan:
-    """Build a PrefetchPlan by simulating chained page flows on the fabric.
+                  tracer=NULL_TRACER, compression: float = 1.0,
+                  background_nbytes: Optional[int] = None) -> PrefetchPlan:
+    """Build a PrefetchPlan via ``repro.transport.plan_transfers`` (one
+    chained-DMA simulation on the fabric — the single planner every
+    byte-moving layer shares).
 
     ``system`` defaults to the TPU v5e preset (host_dram -> chip0 over
     PCIe). ``src_tier`` names the spill tier pages are fetched from
@@ -463,48 +493,40 @@ def plan_prefetch(pages: list, page_bytes: int, system=None,
     egalitarian best-effort; ``PagedKVCache.plan_prefetch`` raises it to
     the pager's deadline-critical class).
 
+    ``page_bytes`` is the *logical* page size; with ``compression`` > 1
+    each page crosses the wire at ``page_bytes / compression`` (the
+    int8-cold-tier case — ``PagedKVCache.plan_prefetch`` passes its own
+    ratio). Open-ended background flows (``nbytes == 0``) are materialized
+    at ``background_nbytes`` — default: the plan's total wire bytes, i.e.
+    the background streams at least as long as the prefetch (the
+    historical heuristic, now an explicit knob).
+
     With no pages to fetch the plan is trivially empty — including on a
     degraded system whose spill tier was hot-removed (an evacuated cache
     must still schedule; its effective bandwidth reports 0.0).
     """
-    from repro.fabric.contention import Flow, effective_bandwidth
-    from repro.fabric.sim import simulate
     from repro.fabric.systems import get_system
+    from repro.transport import PageTransfer, Route, plan_transfers
 
     system = system or get_system("tpu_v5e")
-    dst = system.compute
     try:
-        src = system.tier_node(src_tier or "host")
-        bg = system.resolve_flows(background)
-        eff = effective_bandwidth(system.fabric, src, dst, bg,
-                                  weight=weight, priority=priority)
+        route = Route.resolve(system, src_tier or "host", system.compute)
+        transfers = tuple(
+            PageTransfer(p, page_bytes, compression=compression,
+                         weight=weight, priority=priority) for p in pages)
+        plan = plan_transfers(route, transfers, background=background,
+                              background_nbytes=background_nbytes,
+                              probe_weight=weight, probe_priority=priority,
+                              tracer=tracer)
     except ValueError:
         # spill tier unreachable (hot-removed / dead link): only an empty
         # plan is schedulable — pages stranded there cannot be fetched
         if not pages:
             return PrefetchPlan((), {}, 0.0, 0.0)
         raise
-    if not pages:
-        return PrefetchPlan((), {}, 0.0, eff)
-    # One in-flight fetch at a time (a single DMA queue): stagger each page
-    # flow behind the previous one's contended estimate, then let the sim
-    # resolve the actual ETAs against the background traffic.
-    lat = system.fabric.route_latency(src, dst)
-    est = page_bytes / eff + lat if eff > 0 else lat
-    flows = [Flow(f"page{p}", src, dst, page_bytes, start=i * est,
-                  weight=weight, priority=priority)
-             for i, p in enumerate(pages)]
-    bg_sized = [f if f.nbytes > 0
-                else dataclasses.replace(f, nbytes=page_bytes * len(pages))
-                for f in bg]
-    results = simulate(system.fabric, flows + bg_sized, tracer=tracer)
-    if tracer.enabled:
+    if tracer.enabled and pages:
         tracer.metrics.add("pager.prefetch.pages", len(pages))
-        tracer.metrics.add("pager.prefetch.bytes",
-                           page_bytes * len(pages), tier="host")
-    # Key ETAs by flow id — simulate() documents input-order results, but
-    # positional zip silently breaks the moment flow construction changes
-    # (e.g. background flows interleaved); ids are the contract.
-    by_id = {r.flow.id: r for r in results}
-    eta = {p: by_id[f"page{p}"].finish for p in pages}
-    return PrefetchPlan(tuple(pages), eta, max(eta.values()), eff)
+        tracer.metrics.add("pager.prefetch.bytes", plan.wire_bytes,
+                           tier="host")
+    return PrefetchPlan(tuple(pages), dict(plan.eta), plan.total_time,
+                        plan.effective_bw, plan)

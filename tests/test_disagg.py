@@ -1,0 +1,130 @@
+"""Disaggregated prefill/decode: role binding, ship-route choice, and the
+overlapped page-shipping schedule vs the synchronous handoff."""
+
+import dataclasses
+
+import pytest
+
+from repro.fabric.contention import Flow
+from repro.fabric.systems import get_system
+from repro.serving.disagg import (DisaggConfig, choose_ship_route,
+                                  default_roles, run_disagg_serve)
+
+
+def test_default_roles_per_preset():
+    expect = {"cxl_pool": ("host1", "host0", "dram1"),
+              "tpu_v5e": ("chip1", "chip0", "hbm1"),
+              "gh200": ("grace", "hopper", "lpddr"),
+              "dual_socket_cxl": ("socket1", "socket0", "dram1"),
+              "mi300a": ("ccd", "xcd", "hbm3_unified")}
+    for name, (pf, dc, mem) in expect.items():
+        r = default_roles(get_system(name))
+        assert (r.prefill, r.decode, r.prefill_mem) == (pf, dc, mem), name
+
+
+def test_single_compute_system_raises():
+    from repro.fabric.systems import System
+    from repro.fabric.topology import FabricTopology, LinkType
+    f = FabricTopology("solo")
+    f.add_node("cpu", "compute")
+    f.add_node("dram", "memory")
+    f.add_link("cpu", "dram", LinkType.DDR, 100e9, 100e-9)
+    s = System(name="solo", fabric=f, compute="cpu",
+               tier_map={"local": "dram"})
+    with pytest.raises(ValueError, match="second compute"):
+        default_roles(s)
+
+
+def test_explicit_role_overrides_validated():
+    s = get_system("cxl_pool")
+    r = default_roles(s, decode="host2", prefill="host0")
+    assert (r.prefill, r.decode, r.prefill_mem) == ("host0", "host2",
+                                                    "dram0")
+    with pytest.raises(ValueError, match="not a compute node"):
+        default_roles(s, decode="pool_mem")
+    with pytest.raises(ValueError, match="not a compute node"):
+        default_roles(s, prefill="dram1")
+
+
+def test_choose_ship_route_considers_direct_and_staging():
+    s = get_system("cxl_pool")
+    ch = choose_ship_route(s, default_roles(s), 4 << 20)
+    assert "direct" in ch.considered
+    assert any(k.startswith("via:") for k in ch.considered)
+    assert ch.est_time == min(ch.considered.values())
+    assert ch.staging is None                    # direct wins when healthy
+    assert ch.leg1 is None
+
+
+def test_run_disagg_cxl_pool_headline():
+    rep = run_disagg_serve(DisaggConfig())
+    sched = rep.schedule
+    assert rep.overlap_speedup > 1.2             # beats synchronous handoff
+    assert not sched.violations                  # every SLO deadline met
+    seqs = sorted(rep.ready)
+    for s in seqs:
+        # pages cannot land before their sequence's prefill produced them
+        assert rep.ready[s] >= rep.prefill_done[s]
+        # nor be decoded before they landed
+        assert sched.admit_time[s] >= rep.ready[s] - 1e-12
+    # sequential prefill -> ready times are monotone in sequence order
+    ready = [rep.ready[s] for s in seqs]
+    assert ready == sorted(ready)
+    j = rep.to_json()
+    for key in ("overlap_speedup", "route", "ready_s", "deadline_s",
+                "shipped_wire_bytes", "provenance"):
+        assert key in j
+    assert j["route"]["staging"] is None
+    assert j["shipped_wire_bytes"] == rep.pages_per_seq * \
+        rep.config.requests * rep.wire_page_bytes
+
+
+def test_route_choice_flips_under_degraded_ici():
+    """Nominal tpu_v5e ships HBM->HBM over ICI direct; with the chip link
+    collapsed 1000x the cost model bounces pages through host DRAM."""
+    cfg = DisaggConfig(system="tpu_v5e")
+    nominal = run_disagg_serve(cfg)
+    assert nominal.choice.staging is None
+    assert nominal.choice.route.label == "hbm1->chip0"
+    s = get_system("tpu_v5e")
+    deg = dataclasses.replace(
+        s, fabric=s.fabric.rescaled({("chip0", "chip1"): (0.001, 1.0)},
+                                    name="tpu_v5e+ici_degraded"))
+    flipped = run_disagg_serve(cfg, system=deg)
+    assert flipped.choice.staging == "host_dram"
+    assert flipped.choice.route.label == "host_dram->chip0"
+    assert flipped.choice.leg1 is not None
+    assert flipped.choice.considered["via:host_dram"] < \
+        flipped.choice.considered["direct"]
+
+
+def test_compressed_ship_halves_wire_bytes():
+    fp = run_disagg_serve(DisaggConfig())
+    q = run_disagg_serve(DisaggConfig(kv_dtype="int8"))
+    assert q.plan.logical_bytes == fp.plan.logical_bytes
+    assert fp.plan.wire_bytes / q.plan.wire_bytes > 1.8
+    assert q.overlap_speedup >= fp.overlap_speedup - 0.05
+
+
+def test_qos_protects_ship_under_co_tenant():
+    """A best-effort co-tenant on the shared switch downlink: the default
+    high-priority ship class rides over it (same completions as quiet);
+    demoted to the egalitarian class the link actually splits."""
+    bg = (Flow("co_tenant", "pool_mem", "host0"),)
+    quiet = run_disagg_serve(DisaggConfig())
+    prio = run_disagg_serve(DisaggConfig(background=bg))
+    egal = run_disagg_serve(DisaggConfig(background=bg, ship_priority=0))
+    assert prio.schedule.mean_completion == pytest.approx(
+        quiet.schedule.mean_completion)
+    assert egal.schedule.mean_completion > prio.schedule.mean_completion
+
+
+def test_disagg_family_summary_passes_thresholds():
+    from repro.heimdall.disagg import MIN_OVERLAP_SPEEDUP, disagg_summary
+    d = disagg_summary()
+    assert d["overlap_speedup"] >= MIN_OVERLAP_SPEEDUP
+    assert d["deadline_violations"] == 0
+    assert d["route_choice"]["nominal_staging"] is None
+    assert d["route_choice"]["degraded_staging"] == "host_dram"
+    assert d["compressed_ship"]["bytes_reduction"] >= 1.8
+    assert d["thresholds"]["overlap_speedup_min"] == MIN_OVERLAP_SPEEDUP

@@ -1,0 +1,246 @@
+"""repro.transport: Route resolution/costing, the transfer planner, the
+shared tier probe, and the effective_bandwidth import fence."""
+
+import dataclasses
+import math
+import os
+import re
+
+import pytest
+
+from repro.fabric.contention import Flow
+from repro.fabric.systems import get_system
+from repro.transport import (PageTransfer, Route, plan_transfers,
+                             probe_tier_bandwidths)
+
+
+# -- Route resolution --------------------------------------------------------
+
+def test_route_resolves_tier_and_node_names():
+    s = get_system("tpu_v5e")
+    r = Route.resolve(s, "host", "chip0")
+    assert (r.src, r.dst) == ("host_dram", "chip0")
+    assert (r.src_name, r.dst_name) == ("host", "chip0")
+    assert r.label == "host_dram->chip0"
+    # raw node names resolve to the same path
+    assert Route.resolve(s, "host_dram", "chip0").links == r.links
+
+
+def test_route_constants_match_fabric():
+    s = get_system("cxl_pool")
+    r = Route.resolve(s, "pool", "host0")
+    assert r.bottleneck_bw == s.fabric.route_bandwidth("pool_mem", "host0")
+    assert r.latency == pytest.approx(
+        s.fabric.route_latency("pool_mem", "host0"))
+    assert len(r.links) == 2                 # pool_mem -> switch -> host0
+
+
+def test_route_zero_hop():
+    s = get_system("tpu_v5e")
+    r = Route.resolve(s, "chip0", "chip0")
+    assert r.links == ()
+    assert r.bottleneck_bw == math.inf
+    assert r.latency == 0.0
+
+
+def test_route_unreachable_raises_and_try_resolve_none():
+    s = get_system("cxl_pool")
+    deg = dataclasses.replace(
+        s, fabric=s.fabric.without_nodes(["pool_switch"]))
+    with pytest.raises(ValueError):
+        Route.resolve(deg, "pool", "host0")
+    assert Route.try_resolve(deg, "pool", "host0") is None
+    with pytest.raises(ValueError):
+        Route.resolve(s, "no_such_tier", "host0")
+
+
+def test_route_provenance():
+    s = get_system("gh200")
+    assert Route.resolve(s, "host", "hopper").provenance == "nominal"
+    cal = dataclasses.replace(s, provenance="calibrated")
+    assert Route.resolve(cal, "host", "hopper").provenance == "calibrated"
+    # bare fabrics carry it via the +calibrated naming convention
+    assert Route.resolve(s.fabric, "lpddr", "hopper").provenance == "nominal"
+    fab = s.fabric.rescaled({}, name="gh200+calibrated")
+    assert Route.resolve(fab, "lpddr", "hopper").provenance == "calibrated"
+
+
+def test_from_profile_system_is_calibrated():
+    from repro.calibrate import CalibrationProfile
+    from repro.fabric.systems import from_profile
+    cal = from_profile(CalibrationProfile(system="tpu_v5e", links=()))
+    assert cal.provenance == "calibrated"
+    assert cal.fabric.name == "tpu_v5e+calibrated"
+    assert Route.resolve(cal, "host", "chip0").provenance == "calibrated"
+
+
+# -- costing parity with the cost model --------------------------------------
+
+def test_transfer_time_parity_with_costmodel():
+    from repro.core.costmodel import transfer_time
+    s = get_system("tpu_v5e")
+    n = 8 << 20
+    r = Route.resolve(s, "host", "chip0")
+    assert transfer_time(n, s, "host", "chip0") == pytest.approx(
+        r.transfer_time(n))
+    assert transfer_time(n, s, "host", "chip0", compression=2.0) == \
+        pytest.approx(r.transfer_time(n, compression=2.0))
+
+
+def test_contended_transfer_time_parity_with_costmodel():
+    from repro.core.costmodel import contended_transfer_time
+    s = get_system("tpu_v5e")
+    n = 8 << 20
+    bg = (Flow("bulk", "host", "hbm"),)
+    r = Route.resolve(s, "host", "chip0")
+    for kw in ({}, {"priority": 1}, {"weight": 3.0}):
+        assert contended_transfer_time(n, s, "host", "chip0", bg, **kw) \
+            == pytest.approx(r.contended_transfer_time(n, bg, **kw))
+    # starved: a higher-priority background stream on the same link
+    hot = (Flow("hot", "host", "chip0", priority=5),)
+    assert r.contended_transfer_time(n, hot) == math.inf
+
+
+def test_transfer_time_validates_compression():
+    r = Route.resolve(get_system("tpu_v5e"), "host", "chip0")
+    with pytest.raises(ValueError):
+        r.transfer_time(1 << 20, compression=0.0)
+    with pytest.raises(ValueError):
+        r.contended_transfer_time(1 << 20, compression=-1.0)
+
+
+# -- PageTransfer / TransferPlan ---------------------------------------------
+
+def test_page_transfer_wire_bytes_and_validation():
+    t = PageTransfer(0, 1000, compression=2.0)
+    assert t.wire_bytes == 500
+    assert PageTransfer(1, 3, compression=8.0).wire_bytes == 1  # floor at 1
+    with pytest.raises(ValueError):
+        PageTransfer(2, 0)
+    with pytest.raises(ValueError):
+        PageTransfer(3, 10, compression=0.0)
+
+
+def test_plan_transfers_chained_matches_hand_simulation():
+    """The planner's chained stagger reproduces the historical prefetch
+    semantics: each flow starts at the previous one's contended estimate,
+    ETAs come from the event sim, keyed by transfer id."""
+    from repro.fabric.sim import simulate
+    s = get_system("tpu_v5e")
+    route = Route.resolve(s, "host", "chip0")
+    nbytes = 4 << 20
+    transfers = tuple(PageTransfer(p, nbytes) for p in (7, 3, 5))
+    plan = plan_transfers(route, transfers)
+    assert plan.order == (7, 3, 5)
+    eff = route.effective_bandwidth(())
+    est = nbytes / eff + route.latency
+    flows = [Flow(f"page{p}", "host_dram", "chip0", nbytes, start=i * est)
+             for i, p in enumerate((7, 3, 5))]
+    want = {r.flow.id: r.finish for r in simulate(s.fabric, flows)}
+    for p in (7, 3, 5):
+        assert plan.eta[p] == pytest.approx(want[f"page{p}"])
+    assert plan.total_time == max(plan.eta.values())
+    assert plan.logical_bytes == plan.wire_bytes == 3 * nbytes
+    # unchained: everything starts at its own start time (t=0)
+    par = plan_transfers(route, transfers, chained=False)
+    assert par.total_time <= plan.total_time
+
+
+def test_plan_ready_by_and_violations():
+    s = get_system("tpu_v5e")
+    route = Route.resolve(s, "host", "chip0")
+    transfers = (PageTransfer(0, 4 << 20, deadline=1e9),
+                 PageTransfer(1, 4 << 20, deadline=1e-9))
+    plan = plan_transfers(route, transfers)
+    assert plan.ready_by(0.0) == []
+    assert plan.ready_by(plan.total_time) == [0, 1]
+    assert set(plan.violations) == {1}       # only the impossible deadline
+    assert plan.violations[1] == pytest.approx(plan.eta[1] - 1e-9)
+
+
+def test_plan_transfers_empty():
+    route = Route.resolve(get_system("tpu_v5e"), "host", "chip0")
+    plan = plan_transfers(route, ())
+    assert plan.transfers == () and plan.eta == {}
+    assert plan.total_time == 0.0
+    assert plan.effective_bw == route.effective_bandwidth(())
+
+
+def test_background_autosize_default_and_explicit():
+    """Open-ended (zero-byte) background flows are materialized at the
+    plan's own wire bytes by default — the historical heuristic, now an
+    explicit knob: a shorter co-tenant frees the link early, a longer one
+    contends past the last page."""
+    s = get_system("tpu_v5e")
+    route = Route.resolve(s, "host", "chip0")
+    transfers = tuple(PageTransfer(p, 4 << 20) for p in range(4))
+    bg = (Flow("bulk", "host", "chip0"),)       # nbytes == 0: open-ended
+    total_wire = sum(t.wire_bytes for t in transfers)
+    default = plan_transfers(route, transfers, background=bg)
+    same = plan_transfers(route, transfers, background=bg,
+                          background_nbytes=total_wire)
+    assert default.eta == same.eta               # default == explicit total
+    short = plan_transfers(route, transfers, background=bg,
+                           background_nbytes=total_wire // 64)
+    long = plan_transfers(route, transfers, background=bg,
+                          background_nbytes=total_wire * 8)
+    assert short.total_time < default.total_time <= long.total_time
+    quiet = plan_transfers(route, transfers)
+    assert quiet.total_time < short.total_time   # any co-tenant costs
+
+
+# -- the shared tier probe ---------------------------------------------------
+
+def test_probe_matches_placement_and_elastic():
+    from repro.core.placement import contended_tier_bandwidths
+    from repro.runtime.elastic import degraded_tier_bandwidths
+    s = get_system("tpu_v5e")
+    bg = (Flow("bulk", "host", "hbm"),)
+    assert contended_tier_bandwidths(s, bg) == probe_tier_bandwidths(s, bg)
+    # degraded: spill tier's node hot-removed
+    deg = dataclasses.replace(
+        s, fabric=s.fabric.without_nodes(["host_dram"]))
+    tol = probe_tier_bandwidths(deg, (), tiers=deg.kv_tiers, tolerant=True)
+    assert tol["host"] == 0.0 and tol["hbm"] > 0
+    assert degraded_tier_bandwidths(deg) == tol
+    with pytest.raises(ValueError):              # strict form fails loudly
+        probe_tier_bandwidths(deg, (), tiers=deg.kv_tiers)
+
+
+def test_probe_qos_class_changes_share():
+    s = get_system("tpu_v5e")
+    bg = (Flow("bulk", "host", "chip0"),)
+    egal = probe_tier_bandwidths(s, bg)["host"]
+    prio = probe_tier_bandwidths(s, bg, priority=1)["host"]
+    assert prio > egal                           # rides over best-effort
+
+
+# -- the import fence --------------------------------------------------------
+
+def test_effective_bandwidth_import_fence():
+    """Tentpole invariant: every byte-moving layer costs transfers through
+    ``repro.transport`` — no module outside repro/fabric and
+    repro/transport may call the raw contention ``effective_bandwidth``
+    (the ``Route.effective_bandwidth`` method is the sanctioned surface)."""
+    root = os.path.join(os.path.dirname(__file__), os.pardir, "src",
+                        "repro")
+    pat = re.compile(
+        r"from\s+repro\.fabric(\.contention)?\s+import\s[^\n]*"
+        r"effective_bandwidth"
+        r"|contention\.effective_bandwidth\s*\(")
+    offenders = []
+    for dirpath, _, files in os.walk(root):
+        rel = os.path.relpath(dirpath, root)
+        top = rel.split(os.sep)[0]
+        if top in ("fabric", "transport"):
+            continue
+        for fn in files:
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path) as f:
+                if pat.search(f.read()):
+                    offenders.append(os.path.relpath(path, root))
+    assert not offenders, (
+        f"direct effective_bandwidth use outside repro/fabric + "
+        f"repro/transport: {offenders}; go through transport.Route")
