@@ -101,26 +101,21 @@ def main() -> None:
         unknown = [f for f in names if f not in fams]
         if unknown:
             sys.exit(f"unknown families {unknown}; have {sorted(fams)}")
-        benches = [b for f in names for b in fams[f]]
+        selected = {f: fams[f] for f in fams if f in names}
         selected_summaries = [f for f in SUMMARIZABLE if f in names]
     else:
-        benches = (fams["micro"]
-                   + ([] if args.skip_interference else fams["interference"])
-                   + ([] if args.skip_kv_quant else fams["kv_quant"])
-                   + ([] if args.skip_qos else fams["qos"])
-                   + ([] if args.skip_calibration else fams["calibration"])
-                   + ([] if args.skip_obs else fams["obs"])
-                   + ([] if args.skip_resilience else fams["resilience"])
-                   + ([] if args.skip_disagg else fams["disagg"])
-                   + ([] if args.skip_apps else fams["apps"]))
-        selected_summaries = [
-            f for f, skipped in (("kv_quant", args.skip_kv_quant),
-                                 ("qos", args.skip_qos),
-                                 ("calibration", args.skip_calibration),
-                                 ("obs", args.skip_obs),
-                                 ("resilience", args.skip_resilience),
-                                 ("disagg", args.skip_disagg))
-            if not skipped]
+        skips = {"interference": args.skip_interference,
+                 "kv_quant": args.skip_kv_quant,
+                 "qos": args.skip_qos,
+                 "calibration": args.skip_calibration,
+                 "obs": args.skip_obs,
+                 "resilience": args.skip_resilience,
+                 "disagg": args.skip_disagg,
+                 "apps": args.skip_apps}
+        selected = {f: benches for f, benches in fams.items()
+                    if not skips.get(f, False)}
+        selected_summaries = [f for f in SUMMARIZABLE
+                              if not skips.get(f, False)]
     if args.json_out and len(selected_summaries) != 1:
         sys.exit("--json-out writes one family's JSON summary; select "
                  f"exactly one of {SUMMARIZABLE} (got {selected_summaries}) "
@@ -130,17 +125,36 @@ def main() -> None:
                  f"selected (one of {SUMMARIZABLE})")
     print("name,us_per_call,derived")
     failures = 0
-    for bench in benches:
-        if args.only and args.only not in bench.__name__:
+    fam_stats: dict = {}
+    for fam in fams:
+        if fam not in selected:
+            fam_stats[fam] = None
             continue
-        try:
-            for row in bench():
-                print(row.csv(), flush=True)
-        except Exception as e:      # noqa: BLE001
-            failures += 1
-            print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
-                  flush=True)
-            traceback.print_exc(file=sys.stderr)
+        ran = skipped = failed = 0
+        for bench in selected[fam]:
+            if args.only and args.only not in bench.__name__:
+                skipped += 1
+                continue
+            try:
+                for row in bench():
+                    print(row.csv(), flush=True)
+                ran += 1
+            except Exception as e:      # noqa: BLE001
+                failures += 1
+                failed += 1
+                print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
+                      flush=True)
+                traceback.print_exc(file=sys.stderr)
+        fam_stats[fam] = (ran, skipped, failed)
+    # one status line per family, so a CI log makes "what actually ran"
+    # auditable at a glance (a silently skipped family reads as green)
+    for fam, st in fam_stats.items():
+        if st is None:
+            print(f"family {fam}: skipped", file=sys.stderr)
+        else:
+            ran, skipped, failed = st
+            print(f"family {fam}: ran={ran} skipped={skipped} "
+                  f"failed={failed}", file=sys.stderr)
     failed_summaries = []
     if args.json_out:
         summary = _summary_fn(selected_summaries[0])()

@@ -93,6 +93,18 @@ class CalibrationProfile:
                        f"({self.system}); have "
                        f"{[(e.src, e.dst) for e in self.links]}")
 
+    def predicted_time(self, src: str, dst: str, nbytes: float) -> float:
+        """Fitted-constant transfer time for ``nbytes`` on the measured
+        ``src -> dst`` route: ``nbytes / bandwidth + latency``.
+
+        This is the profile's own closed-form prediction — what the drift
+        sentinel (``repro.obs.drift``) replays observed timings against
+        without rebuilding a full calibrated ``System``. Raises ``KeyError``
+        for a route the profile never measured.
+        """
+        est = self.estimate(src, dst)
+        return nbytes / est.bandwidth + est.latency
+
     def tier_measurements(self, system=None) -> dict:
         """Per-tier measurement dict for ``TierTopology.from_calibration``
         — the round-trip bridge: the same fitted route constants expressed

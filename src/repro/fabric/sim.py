@@ -151,10 +151,14 @@ def simulate(topo: FabricTopology, flows: Sequence[Flow],
             active[f.id] = f
             remaining[f.id] = float(f.nbytes)
             if traced:
+                # links: the route's physical link labels, so consumers
+                # (obs.attribution) can charge this flow's wait to its
+                # bottleneck link without re-resolving the route
                 tracer.async_begin(
                     f.id, id=f.id, ts=f.start, track=("fabric", "flows"),
                     cat="flow", src=f.src, dst=f.dst, nbytes=f.nbytes,
-                    priority=f.priority, weight=f.weight)
+                    priority=f.priority, weight=f.weight,
+                    links=[link_lbl[pid] for pid in flow_pids[f.id]])
                 for pid in flow_pids[f.id]:
                     link_bytes[pid] = link_bytes.get(pid, 0.0) + f.nbytes
         if not active:

@@ -52,6 +52,8 @@ MiB = 1 << 20
 # Thresholds CI holds BENCH_obs.json to.
 MAX_OVERHEAD_FRAC = 0.05
 MAX_BYTE_REL_ERR = 1e-6
+MAX_HIST_REL_ERR = 0.02          # histogram vs exact p50/p95/p99
+MIN_ATTR_TOP_FRAC = 0.9          # violators blaming the degraded link
 
 
 @functools.lru_cache(maxsize=1)
@@ -133,14 +135,36 @@ def _serve_fixture():
 def _run_serve(tracer):
     engine, reqs = _serve_fixture()
     engine.tracer = tracer
+    engine.slo = None
     return engine.serve(list(reqs))
 
 
+def _run_serve_obs(tracer):
+    """The serve path with the full consumer stack attached: events ride
+    a ``FlightRecorder`` ring and every request feeds an ``SLOMonitor`` —
+    the attribution-era cost a production deployment would actually pay,
+    capped by the same 5% threshold as bare tracing."""
+    from repro.obs import FlightRecorder, SLOMonitor
+
+    engine, reqs = _serve_fixture()
+    slo = None
+    if tracer.enabled:
+        tracer = FlightRecorder(capacity=4096, forward=tracer)
+        slo = SLOMonitor({"serve": 0.5}, tracer=tracer)
+    engine.tracer = tracer
+    engine.slo = slo
+    try:
+        return engine.serve(list(reqs))
+    finally:
+        engine.slo = None
+
+
 _OVERHEAD_PATHS = (
-    # (label, runner, warmup, iters): the headline first; uncapped views
-    # after. The headline's iters are high because the estimator is a min
-    # over pairs — more pairs, tighter tail.
+    # (label, runner, warmup, iters): the capped headlines first; uncapped
+    # views after. The headline's iters are high because the estimator is
+    # a min over pairs — more pairs, tighter tail.
     ("serve", _run_serve, 1, 20),
+    ("serve_obs", _run_serve_obs, 1, 20),
     ("paged_decode", _run_paged_decode, 1, 7),
     ("schedule", _run_schedule, 2, 15),
     ("sim", _run_sim, 2, 15),
@@ -197,7 +221,7 @@ def _overhead_fracs() -> dict:
     for label, run, warmup, iters in _OVERHEAD_PATHS:
         m = _paired_overhead(run, warmup, iters)
         reruns = 0
-        while (label == "serve" and reruns < 2
+        while (label in ("serve", "serve_obs") and reruns < 2
                and m["overhead_frac"] > 0.8 * MAX_OVERHEAD_FRAC):
             reruns += 1
             again = _paired_overhead(run, 0, iters)
@@ -274,12 +298,196 @@ def obs_trace_export() -> list:
                 f"async={counts['async']};counters={counts['counters']}")]
 
 
-ALL_OBS = [obs_tracer_overhead, obs_byte_conservation, obs_trace_export]
+# --------------------------------------------------------------------------
+# Attribution / drift / recorder on the host-link-halved resilience scenario
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def _obs_profile():
+    """The tpu_v5e calibration artifact the drift sentinel anchors on —
+    shared with the calibration family so both report one fit."""
+    from repro.heimdall.calibration import _calibrated
+    return _calibrated()["tpu_v5e"]["profile"]
+
+
+@functools.lru_cache(maxsize=1)
+def _degraded_link() -> str:
+    """Trace label of the link ``host_link_degraded`` halves: the
+    lowest-bandwidth link on the spill->compute route (where attribution
+    charges the wait)."""
+    from repro.fabric.sim import link_label
+    from repro.fabric.systems import get_system
+    base = get_system("tpu_v5e")
+    spill = base.tier_node(base.kv_tiers[1])
+    links = base.fabric.route(spill, base.compute)
+    return link_label(min(links, key=lambda l: l.bandwidth))
+
+
+@functools.lru_cache(maxsize=1)
+def _resilience_obs() -> dict:
+    """The headline scenario with the full obs stack attached.
+
+    Both arms (reacting and baseline) of the host-link-halved serve run on
+    the *calibrated* system with a ``FlightRecorder`` as the tracer and a
+    ``DriftSentinel`` anchored on the same profile — so healthy rounds
+    predict at ratio ~1.0 and the degraded link shows as ~2x. After the
+    run, four probe transfers on an untouched route (hbm1 -> chip0, on the
+    degraded fabric) feed the react arm's sentinel: the no-false-positive
+    half of the headline — the sick route flags, the healthy one must not.
+    """
+    from repro.fabric.systems import from_profile
+    from repro.obs import DriftSentinel, FlightRecorder
+    from repro.runtime.degrade import host_link_degraded, run_degraded_serve
+    from repro.transport import PageTransfer, Route, plan_transfers
+
+    profile = _obs_profile()
+    schedule = host_link_degraded()
+    out = {}
+    for label, react in (("react", True), ("baseline", False)):
+        rec = FlightRecorder(capacity=32768, clock=lambda: 0.0)
+        sent = DriftSentinel(profile, preset="tpu_v5e", tracer=rec)
+        rep = run_degraded_serve(schedule, react=react,
+                                 calibration_profile=profile,
+                                 sentinel=sent, recorder=rec)
+        out[label] = {"report": rep, "recorder": rec, "sentinel": sent}
+    deg = schedule.degraded_system(
+        from_profile(profile, preset="tpu_v5e"), 11)
+    route = Route.resolve(deg, "hbm1", "chip0")
+    sent = out["react"]["sentinel"]
+    for i in range(4):
+        plan = plan_transfers(route,
+                              (PageTransfer(f"probe{i}", 8 * MiB),))
+        sent.observe_plan(plan, ts=100.0 + i)
+    return out
+
+
+@functools.lru_cache(maxsize=1)
+def _attr_stats() -> dict:
+    """Pooled 'who tops the violators' stats over both arms (shared by the
+    rows, the summary, and the tests)."""
+    res = _resilience_obs()
+    prefix = f"link_wait:{_degraded_link()}"
+    total = on_link = 0
+    for arm in ("react", "baseline"):
+        summ = res[arm]["report"].attribution
+        if not summ:
+            continue
+        total += summ["requests"]
+        on_link += sum(c for lbl, c in summ["top_counts"].items()
+                       if lbl.startswith(prefix))
+    return {"violating_requests": total,
+            "top_degraded": on_link,
+            "top_degraded_frac": on_link / total if total else 0.0,
+            "degraded_link": _degraded_link()}
+
+
+def obs_attribution() -> list:
+    """Critical-path attribution on the resilience scenario: the degraded
+    link must top >= 90% of SLO-violating requests (pooled over arms)."""
+    res = _resilience_obs()
+    stats = _attr_stats()
+    rows = [Row("obs_attr/top_degraded_frac", 0.0,
+                f"frac={stats['top_degraded_frac']:.3f};"
+                f"violators={stats['violating_requests']};"
+                f"threshold={MIN_ATTR_TOP_FRAC}")]
+    for arm in ("react", "baseline"):
+        rep = res[arm]["report"]
+        summ = rep.attribution or {}
+        top = next(iter(summ.get("top_counts", {})), None)
+        rows.append(Row(
+            f"obs_attr/{arm}",
+            (rep.slo or {}).get("interactive", {}).get("p99_s", 0.0) * 1e6,
+            f"violators={summ.get('requests', 0)};top={top};"
+            f"detect_round={rep.detect_round}"))
+    return rows
+
+
+def obs_drift() -> list:
+    """Drift sentinel vs the calibrated expectation: the degraded route
+    flags, the healthy probe route stays clean."""
+    sent = _resilience_obs()["react"]["sentinel"]
+    rows = []
+    for route, st in sorted(sent.report()["routes"].items()):
+        med = st["median_ratio"]
+        rows.append(Row(
+            f"obs_drift/{route}", 0.0,
+            f"median_ratio={med:.3f};n_obs={st['n_obs']};"
+            f"flagged={st['flagged']}"))
+    return rows
+
+
+def obs_recorder() -> list:
+    """Flight-recorder snapshots taken inside the scenario: each must be
+    a structurally valid Chrome trace with the attribution attached."""
+    rows = []
+    for arm in ("react", "baseline"):
+        rec = _resilience_obs()[arm]["recorder"]
+        for snap in rec.snapshots:
+            md = snap["metadata"]
+            counts = validate_chrome_trace(snap)
+            rows.append(Row(
+                f"obs_recorder/{arm}/{md['reason']}", 0.0,
+                f"events={md['events']};dropped={md['dropped']};"
+                f"valid_events={counts['events']};"
+                f"has_attr={int('attribution' in md)}"))
+    return rows
+
+
+@functools.lru_cache(maxsize=1)
+def _histogram_accuracy() -> dict:
+    """LatencyHistogram percentiles vs exact, on 20k log-normal latencies
+    (~2.5ms median, sigma one decade's worth of spread — a serving-shaped
+    distribution). Same rank rule on both sides: the measured error is
+    pure bucket quantization, capped at 2%."""
+    import math
+    import random
+
+    from repro.obs import LatencyHistogram
+
+    rng = random.Random(0)
+    samples = sorted(math.exp(rng.gauss(-6.0, 1.0)) for _ in range(20000))
+    hist = LatencyHistogram()
+    for v in samples:
+        hist.record(v)
+    out = {}
+    for q in (50, 95, 99):
+        rank = min(len(samples), max(1, math.ceil(q / 100 * len(samples))))
+        exact = samples[rank - 1]
+        est = hist.percentile(q)
+        out[f"p{q}"] = {"exact_s": exact, "estimate_s": est,
+                        "rel_err": abs(est - exact) / exact}
+    out["max_rel_err"] = max(v["rel_err"] for v in out.values())
+    out["bound"] = hist.rel_error_bound
+    out["samples"] = len(samples)
+    return out
+
+
+def obs_histogram() -> list:
+    """Histogram percentile accuracy vs exact (<= 2% rel err, CI-held)."""
+    acc = _histogram_accuracy()
+    rows = []
+    for q in ("p50", "p95", "p99"):
+        a = acc[q]
+        rows.append(Row(f"obs_hist/{q}", a["estimate_s"] * 1e6,
+                        f"exact_us={a['exact_s'] * 1e6:.2f};"
+                        f"rel_err={a['rel_err']:.5f}"))
+    rows.append(Row("obs_hist/max_rel_err", 0.0,
+                    f"rel_err={acc['max_rel_err']:.5f};"
+                    f"bound={acc['bound']:.5f};"
+                    f"threshold={MAX_HIST_REL_ERR}"))
+    return rows
+
+
+ALL_OBS = [obs_tracer_overhead, obs_byte_conservation, obs_trace_export,
+           obs_attribution, obs_drift, obs_recorder, obs_histogram]
 
 
 def obs_summary() -> dict:
     """The BENCH_obs.json payload: tracer overhead on the end-to-end
-    paged-decode path and byte conservation of the exported timelines."""
+    serving paths, byte conservation of the exported timelines, and the
+    attribution / histogram / drift / recorder checks on the
+    host-link-halved resilience scenario."""
     fracs = _overhead_fracs()
     null_us = {lbl: m["null_s"] * 1e6 for lbl, m in fracs.items()}
     traced_us = {lbl: m["traced_s"] * 1e6 for lbl, m in fracs.items()}
@@ -287,6 +495,19 @@ def obs_summary() -> dict:
     errs = byte_conservation_errors()
     tracer, _ = _traced_sim()
     counts = validate_chrome_trace(chrome_trace(tracer))
+    res = _resilience_obs()
+    stats = _attr_stats()
+    sent_report = res["react"]["sentinel"].report()
+    acc = _histogram_accuracy()
+    recorder = {}
+    for arm in ("react", "baseline"):
+        rec = res[arm]["recorder"]
+        recorder[arm] = {
+            "snapshots": [s["metadata"]["reason"] for s in rec.snapshots],
+            "emitted": rec.emitted,
+            "dropped": rec.dropped,
+            "capacity": rec.capacity,
+        }
     return {
         "family": "obs",
         "system": "tpu_v5e",
@@ -295,9 +516,12 @@ def obs_summary() -> dict:
         "overhead": {
             "null_us": null_us,
             "traced_us": traced_us,
-            # the CI-capped headline: tracing the live serving engine
+            # the CI-capped headlines: tracing the live serving engine,
+            # bare and with the recorder + SLO-monitor stack attached
             "overhead_frac": frac["serve"],
             "n_reruns": fracs["serve"]["n_reruns"],
+            "attribution_overhead_frac": frac["serve_obs"],
+            "attribution_n_reruns": fracs["serve_obs"]["n_reruns"],
             # uncapped views (see module docstring)
             "paged_decode_overhead_frac": frac["paged_decode"],
             "schedule_overhead_frac": frac["schedule"],
@@ -308,6 +532,30 @@ def obs_summary() -> dict:
             "max_rel_err": max(errs.values()),
         },
         "trace": dict(counts),
+        "attribution": {
+            **stats,
+            "detect_round": {
+                arm: res[arm]["report"].detect_round
+                for arm in ("react", "baseline")},
+        },
+        "histogram": {
+            "samples": acc["samples"],
+            "rel_err": {q: acc[q]["rel_err"]
+                        for q in ("p50", "p95", "p99")},
+            "max_rel_err": acc["max_rel_err"],
+            "bound": acc["bound"],
+        },
+        "drift": {
+            "flagged_routes": sent_report["flagged"],
+            "routes": {k: {"median_ratio": v["median_ratio"],
+                           "n_obs": v["n_obs"],
+                           "flagged": v["flagged"]}
+                       for k, v in sent_report["routes"].items()},
+        },
+        "recorder": recorder,
         "thresholds": {"max_overhead_frac": MAX_OVERHEAD_FRAC,
-                       "max_byte_rel_err": MAX_BYTE_REL_ERR},
+                       "max_byte_rel_err": MAX_BYTE_REL_ERR,
+                       "max_attr_overhead_frac": MAX_OVERHEAD_FRAC,
+                       "max_hist_rel_err": MAX_HIST_REL_ERR,
+                       "min_attr_top_frac": MIN_ATTR_TOP_FRAC},
     }

@@ -67,13 +67,16 @@ class ServeEngine:
     def __init__(self, cfg, mesh=None,
                  parallel: ParallelConfig = ParallelConfig(fsdp=False),
                  offload_weights: bool = False, rng_seed: int = 0,
-                 tracer=NULL_TRACER):
+                 tracer=NULL_TRACER, slo=None):
         self.cfg = cfg
         # Observability: wall-clock prefill/decode-step spans plus a
         # StragglerStats fed one sample per decode step — its inflation
         # flag and summary land in the metrics snapshot, the signal the
-        # elastic-degradation loop will key on.
+        # elastic-degradation loop will key on. ``slo`` optionally attaches
+        # a repro.obs.SLOMonitor: one latency observation per finished
+        # request (class "serve"), burn-rate alerting included.
         self.tracer = tracer
+        self.slo = slo
         self.straggler = StragglerStats()
         mesh = mesh or make_host_mesh()
         self.model = Model.create(cfg, mesh, parallel)
@@ -167,6 +170,10 @@ class ServeEngine:
             m.set("serve.decode_ms_per_tok", ms_per_tok)
             for k, v in self.straggler.summary().items():
                 m.set(f"serve.straggler.{k}", v)
+        if self.slo is not None:
+            lat = (handoff.prefill_ms + ms_per_tok * handoff.max_new) * 1e-3
+            for r in requests:
+                self.slo.observe("serve", lat)
         return [Result(r.rid, outs[i][:r.max_new], handoff.prefill_ms,
                        ms_per_tok)
                 for i, r in enumerate(requests)]
@@ -217,6 +224,9 @@ class DecodeSchedule:
     violations: dict = dataclasses.field(default_factory=dict)
     # seq id -> overrun (s) past its deadline; only sequences given a
     # deadline via ``schedule(..., deadlines=)`` can appear here
+    plan: object = None
+    # the prefetch/transfer plan the schedule admitted against — the
+    # drift sentinel replays it against calibration predictions
 
     @property
     def mean_completion(self) -> float:
@@ -288,12 +298,24 @@ class DecodeScheduler:
                                         weight=self.weight,
                                         priority=self.priority)
         ready = self.ready_times(seq_ids, plan)
+        seq_flows = None
+        if self.tracer.enabled:
+            # flow ids the pager's plan_transfers assigned ("page{p}") —
+            # the per-request attribution joins these against the fabric
+            # sim's flow lifecycle events
+            seq_flows = {s: [f"page{p}" for p in self.cache.tables[s]
+                             if self.cache.tier_of_page[p] == 1]
+                         for s in seq_ids}
         return admission_schedule(ready, plan, n_steps, self.step_time,
-                                  deadlines=deadlines, tracer=self.tracer)
+                                  deadlines=deadlines,
+                                  seq_flows=seq_flows, tracer=self.tracer)
 
 
 def admission_schedule(ready: dict, plan, n_steps: int, step_time: float,
                        *, deadlines: Optional[dict] = None,
+                       seq_flows: Optional[dict] = None,
+                       starts: Optional[dict] = None,
+                       prefill_done: Optional[dict] = None,
                        tracer=NULL_TRACER) -> DecodeSchedule:
     """The deadline-aware admission loop itself, plan-agnostic.
 
@@ -303,8 +325,26 @@ def admission_schedule(ready: dict, plan, n_steps: int, step_time: float,
     transport ``TransferPlan`` (the disaggregated prefill->decode shipment
     reuses this loop unchanged: pages landing over the cross-host route
     admit sequences exactly like host->HBM prefetches do).
+
+    ``seq_flows`` (seq id -> list of fabric flow ids carrying its bytes)
+    turns on per-request attribution: one ``attrib.request`` instant per
+    sequence ties the request to its flows, its pages-ready time, its
+    start (``starts``, default 0.0 — sim-time origin) and optionally its
+    prefill completion (``prefill_done``), which is everything
+    ``repro.obs.attribution`` needs to rebuild the critical path.
     """
     seq_ids = list(ready)
+    if tracer.enabled and seq_flows is not None:
+        for s in seq_ids:
+            t0 = (starts or {}).get(s, 0.0)
+            extra = {}
+            pd = (prefill_done or {}).get(s)
+            if pd is not None:
+                extra["prefill_done"] = pd
+            tracer.instant("attrib.request", ts=t0,
+                           track=("scheduler", "attribution"),
+                           cat="attrib", rid=s, start=t0, ready=ready[s],
+                           flows=list(seq_flows.get(s, ())), **extra)
     remaining = {s: n_steps for s in seq_ids}
     admit: dict = {}
     finish: dict = {}
@@ -362,7 +402,8 @@ def admission_schedule(ready: dict, plan, n_steps: int, step_time: float,
             if done is not None and done > dl:
                 violations[s] = done - dl
     sched = DecodeSchedule(tuple(steps), admit, finish, makespan, sync,
-                           plan.total_time, step_time, violations)
+                           plan.total_time, step_time, violations,
+                           plan=plan)
     if traced:
         m = tracer.metrics
         m.add("sched.steps", len(steps))
@@ -531,25 +572,55 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="METRICS.json",
                     help="write the metrics snapshot "
                          "(MetricsRegistry.to_json) alongside the report")
+    ap.add_argument("--recorder-out", default=None, metavar="FLIGHT.json",
+                    help="attach a FlightRecorder (bounded ring buffer) "
+                         "and write its snapshot here — for --degrade-sim "
+                         "the dump is triggered by the first SLO burn "
+                         "alert / detector fire and carries the failing "
+                         "window's attribution summary")
+    ap.add_argument("--recorder-capacity", type=int, default=8192,
+                    help="flight-recorder ring size in events")
     args = ap.parse_args()
 
     tracer = NULL_TRACER
     if args.trace_out or args.metrics_out:
         from repro.obs import Tracer
         tracer = Tracer()
+    recorder = None
+    if args.recorder_out:
+        from repro.obs import FlightRecorder
+        # events flow through the ring; an enabled full tracer (from
+        # --trace-out/--metrics-out) still sees everything via forward=
+        recorder = FlightRecorder(
+            capacity=args.recorder_capacity,
+            forward=tracer if tracer.enabled else None)
+        tracer = recorder
 
     def _flush_obs():
+        # --trace-out wants the full history: the forwarded tracer when a
+        # ring-buffer recorder sits in front, the tracer itself otherwise
+        full = recorder.forward if (recorder is not None
+                                    and recorder.forward is not None) \
+            else tracer
         if args.trace_out:
             from repro.obs import write_chrome_trace
-            write_chrome_trace(tracer, args.trace_out)
+            write_chrome_trace(full, args.trace_out)
             print(f"# trace: {args.trace_out} "
-                  f"({len(tracer.events)} events; open in "
+                  f"({len(full.events)} events; open in "
                   "https://ui.perfetto.dev)")
         if args.metrics_out:
             with open(args.metrics_out, "w") as f:
                 json.dump(tracer.metrics.to_json(), f, indent=2,
                           sort_keys=True)
             print(f"# metrics: {args.metrics_out}")
+        if args.recorder_out:
+            trace = recorder.dump(args.recorder_out)
+            meta = trace.get("metadata", {})
+            print(f"# flight recorder: {args.recorder_out} "
+                  f"(reason={meta.get('reason')!r}, "
+                  f"{meta.get('events')} events, "
+                  f"{meta.get('dropped')} dropped; open in "
+                  "https://ui.perfetto.dev)")
 
     if args.paged_sim:
         print(json.dumps(simulate_paged_decode(
@@ -583,7 +654,8 @@ def main():
         react = run_degraded_serve(
             sched, cfg=cfg, react=True,
             calibration_profile=args.calibration_profile,
-            tracer=tracer.scoped("react") if tracer.enabled else tracer)
+            tracer=tracer.scoped("react") if tracer.enabled else tracer,
+            recorder=recorder)
         base = run_degraded_serve(
             sched, cfg=cfg, react=False,
             calibration_profile=args.calibration_profile,

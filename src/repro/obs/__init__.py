@@ -16,16 +16,39 @@ or makes a scheduling decision:
   * ``calibrate.validate``                — truth/calibrated/nominal
                                             provenance tags on replays
 
+And the consumers that turn that firehose into answers:
+
+  * ``attribution`` — per-request critical-path latency breakdown
+    (link-wait by (link, QoS class), scheduler wait, compute) from the
+    events above; ``attribution_summary`` ranks "why was this slow".
+  * ``slo`` — streaming per-class SLO state: mergeable log-scale latency
+    histograms (``LatencyHistogram``) and burn-rate alerting
+    (``SLOMonitor``), no per-request storage.
+  * ``recorder`` — ``FlightRecorder``, a bounded ring-buffer tracer that
+    snapshots the failing window to a Perfetto-loadable dump on alert.
+  * ``drift`` — ``DriftSentinel``, observed per-route transfer timings
+    replayed against ``CalibrationProfile`` predictions (Cohet-style
+    continuous re-validation).
+
 Exports: ``Tracer`` (spans, instants, async flows, counters; injectable
 deterministic clock), ``NullTracer``/``NULL_TRACER`` (free when disabled),
 ``MetricsRegistry`` (labeled counters/gauges, ``to_json`` snapshot),
-``chrome_trace``/``write_chrome_trace`` (Perfetto-loadable export),
-``link_timelines`` (utilization reconstruction + byte conservation).
+``chrome_trace``/``write_chrome_trace``/``ChromeTraceWriter``/
+``recorder_trace`` (Perfetto-loadable export, incremental and
+ring-sanitized paths), ``link_timelines`` (utilization reconstruction +
+byte conservation).
 """
 
-from repro.obs.export import (chrome_trace, validate_chrome_trace,
+from repro.obs.attribution import (RequestAttribution, Segment,
+                                   attribute_requests, attribution_summary,
+                                   event_cursor, events_since)
+from repro.obs.drift import DriftSentinel
+from repro.obs.export import (ChromeTraceWriter, chrome_trace,
+                              recorder_trace, validate_chrome_trace,
                               write_chrome_trace)
 from repro.obs.metrics import NULL_METRICS, MetricsRegistry, NullMetrics
+from repro.obs.recorder import FlightRecorder
+from repro.obs.slo import LatencyHistogram, SLOMonitor
 from repro.obs.timeline import LinkTimeline, link_timelines
 from repro.obs.trace import (DEFAULT_TRACK, NULL_TRACER, NullTracer,
                              TraceEvent, Tracer)
@@ -34,5 +57,10 @@ __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "TraceEvent", "DEFAULT_TRACK",
     "MetricsRegistry", "NullMetrics", "NULL_METRICS",
     "chrome_trace", "write_chrome_trace", "validate_chrome_trace",
+    "ChromeTraceWriter", "recorder_trace",
     "LinkTimeline", "link_timelines",
+    "RequestAttribution", "Segment", "attribute_requests",
+    "attribution_summary", "event_cursor", "events_since",
+    "LatencyHistogram", "SLOMonitor",
+    "FlightRecorder", "DriftSentinel",
 ]

@@ -1,15 +1,26 @@
 """Chrome trace-event JSON export (Perfetto / chrome://tracing).
 
-``chrome_trace`` renders a ``Tracer``'s event list into the trace-event
-format: every ``(process, thread)`` track becomes a pid/tid pair with
-metadata naming events, spans become matched B/E pairs, async lifecycles
-(fabric flows) become b/n/e triples correlated by id, and counter samples
-become multi-series "C" tracks — the per-link utilization timelines render
-as stacked area charts under each link's track.
+``chrome_trace`` renders a ``Tracer``'s event list (or any iterable of
+``TraceEvent``) into the trace-event format: every ``(process, thread)``
+track becomes a pid/tid pair with metadata naming events, spans become
+matched B/E pairs, async lifecycles (fabric flows) become b/n/e triples
+correlated by id, and counter samples become multi-series "C" tracks — the
+per-link utilization timelines render as stacked area charts under each
+link's track.
 
 Determinism is part of the contract: with an injected fixed clock the
 emitted JSON is byte-stable (pids/tids assigned in first-seen order, events
 stably sorted by timestamp), which is what the golden-file test pins.
+
+``ChromeTraceWriter`` is the incremental path the flight recorder uses:
+already-rendered events are never re-sorted — each ``extend`` batch is
+sorted on its own and merged in, so exporting N snapshots of a long run
+costs O(new events) per snapshot instead of re-sorting the full history.
+
+``recorder_trace`` exports a *truncated* stream (a ring buffer's tail):
+orphaned E/e events whose B/b was dropped are removed and dangling B/b
+events are closed with synthetic end events (tagged ``truncated``), so the
+snapshot always passes ``validate_chrome_trace`` and loads in Perfetto.
 
 ``validate_chrome_trace`` is the self-check the obs benchmark family and
 the tests share: timestamps sorted, B/E balanced per track, async events
@@ -18,36 +29,47 @@ balanced per (cat, id).
 
 from __future__ import annotations
 
+import heapq
 import json
-from typing import Union
+from typing import Iterable, Union
 
-from repro.obs.trace import NullTracer, Tracer
+from repro.obs.trace import NullTracer, TraceEvent, Tracer
 
 _US = 1e6                        # trace-event timestamps are microseconds
 
 
-def chrome_trace(tracer: Union[Tracer, NullTracer]) -> dict:
-    """Render the tracer's events as a Chrome trace-event JSON object."""
-    pids: dict[str, int] = {}
-    tids: dict[tuple, int] = {}
-    meta: list[dict] = []
-    out: list[dict] = []
-    # Stable sort: events at equal timestamps keep emission order, so an E
-    # and the next span's B at the same instant stay correctly ordered.
-    for ev in sorted(tracer.events, key=lambda e: e.ts):
+class ChromeTraceWriter:
+    """Incremental trace-event renderer with stable pid/tid assignment.
+
+    ``extend`` renders a batch of ``TraceEvent``s; batches arriving in
+    timestamp order append in O(batch log batch) (one local sort), and an
+    out-of-order batch falls back to a single linear merge — the full
+    history is never re-sorted. ``trace()`` returns the Perfetto-loadable
+    object (metadata first, then events).
+    """
+
+    def __init__(self):
+        self._pids: dict[str, int] = {}
+        self._tids: dict[tuple, int] = {}
+        self._meta: list[dict] = []
+        self._out: list[dict] = []
+
+    def _render(self, ev: TraceEvent) -> dict:
         proc, thread = ev.track
-        if proc not in pids:
-            pids[proc] = len(pids) + 1
-            meta.append({"ph": "M", "pid": pids[proc], "tid": 0,
-                         "name": "process_name",
-                         "args": {"name": proc}})
-        if ev.track not in tids:
-            tids[ev.track] = sum(1 for t in tids if t[0] == proc) + 1
-            meta.append({"ph": "M", "pid": pids[proc],
-                         "tid": tids[ev.track], "name": "thread_name",
-                         "args": {"name": thread}})
-        e = {"ph": ev.kind, "name": ev.name, "pid": pids[proc],
-             "tid": tids[ev.track], "ts": ev.ts * _US}
+        if proc not in self._pids:
+            self._pids[proc] = len(self._pids) + 1
+            self._meta.append({"ph": "M", "pid": self._pids[proc],
+                               "tid": 0, "name": "process_name",
+                               "args": {"name": proc}})
+        if ev.track not in self._tids:
+            self._tids[ev.track] = sum(
+                1 for t in self._tids if t[0] == proc) + 1
+            self._meta.append({"ph": "M", "pid": self._pids[proc],
+                               "tid": self._tids[ev.track],
+                               "name": "thread_name",
+                               "args": {"name": thread}})
+        e = {"ph": ev.kind, "name": ev.name, "pid": self._pids[proc],
+             "tid": self._tids[ev.track], "ts": ev.ts * _US}
         if ev.cat:
             e["cat"] = ev.cat
         if ev.kind == "i":
@@ -57,8 +79,39 @@ def chrome_trace(tracer: Union[Tracer, NullTracer]) -> dict:
             e.setdefault("cat", "async")       # async matching needs a cat
         if ev.args:
             e["args"] = ev.args
-        out.append(e)
-    return {"traceEvents": meta + out, "displayTimeUnit": "ms"}
+        return e
+
+    def extend(self, events: Iterable[TraceEvent]) -> None:
+        # Stable sort within the batch: events at equal timestamps keep
+        # emission order, so an E and the next span's B at the same
+        # instant stay correctly ordered.
+        batch = [self._render(ev)
+                 for ev in sorted(events, key=lambda e: e.ts)]
+        if not batch:
+            return
+        if self._out and batch[0]["ts"] < self._out[-1]["ts"]:
+            # rare: a batch overlapping already-written history — one
+            # linear merge, still no full re-sort
+            self._out = list(heapq.merge(self._out, batch,
+                                         key=lambda e: e["ts"]))
+        else:
+            self._out.extend(batch)
+
+    def add(self, ev: TraceEvent) -> None:
+        self.extend((ev,))
+
+    def trace(self) -> dict:
+        return {"traceEvents": self._meta + self._out,
+                "displayTimeUnit": "ms"}
+
+
+def chrome_trace(tracer: Union[Tracer, NullTracer, Iterable]) -> dict:
+    """Render a tracer's events (or any ``TraceEvent`` iterable) as a
+    Chrome trace-event JSON object."""
+    events = getattr(tracer, "events", tracer)
+    w = ChromeTraceWriter()
+    w.extend(events)
+    return w.trace()
 
 
 def write_chrome_trace(tracer: Union[Tracer, NullTracer],
@@ -67,6 +120,67 @@ def write_chrome_trace(tracer: Union[Tracer, NullTracer],
     trace = chrome_trace(tracer)
     with open(path, "w") as f:
         json.dump(trace, f, indent=1)
+    return trace
+
+
+def _balance_events(events: list) -> list:
+    """Repair a truncated event stream (time-sorted ``TraceEvent`` list).
+
+    A ring buffer drops the *oldest* events, so the tail can hold E events
+    whose B is gone and B/b events whose E/e falls past the snapshot.
+    Orphans are dropped (including an E closing a differently-named B —
+    the stack below it belongs to a dropped frame) and dangling opens are
+    closed at the last timestamp with synthetic events tagged
+    ``truncated`` — the result always validates.
+    """
+    out: list = []
+    stacks: dict[tuple, list] = {}
+    async_open: dict[tuple, list] = {}
+    last_ts = 0.0
+    for ev in events:
+        last_ts = ev.ts
+        if ev.kind == "B":
+            stacks.setdefault(ev.track, []).append((ev.name, len(out)))
+            out.append(ev)
+        elif ev.kind == "E":
+            stack = stacks.get(ev.track)
+            if not stack or stack[-1][0] != ev.name:
+                continue                       # orphaned close: drop
+            stack.pop()
+            out.append(ev)
+        elif ev.kind == "b":
+            async_open.setdefault((ev.cat, ev.id), []).append(ev)
+            out.append(ev)
+        elif ev.kind == "e":
+            opens = async_open.get((ev.cat, ev.id))
+            if not opens:
+                continue                       # begin was dropped
+            opens.pop()
+            out.append(ev)
+        else:
+            out.append(ev)
+    closers: list = []
+    for track, stack in stacks.items():
+        for name, _ in reversed(stack):
+            closers.append(TraceEvent("E", name, last_ts, track, "",
+                                      None, {"truncated": True}))
+    for (cat, id_), opens in async_open.items():
+        for ev in opens:
+            closers.append(TraceEvent("e", ev.name, last_ts, ev.track,
+                                      cat, id_, {"truncated": True}))
+    return out + closers
+
+
+def recorder_trace(events: Iterable[TraceEvent],
+                   metadata: dict = None) -> dict:
+    """Perfetto-loadable export of a (possibly ring-truncated) event
+    stream; ``metadata`` lands under a top-level ``"metadata"`` key
+    (ignored by Perfetto, read by humans and the CI artifact checks)."""
+    w = ChromeTraceWriter()
+    w.extend(_balance_events(sorted(events, key=lambda e: e.ts)))
+    trace = w.trace()
+    if metadata is not None:
+        trace["metadata"] = metadata
     return trace
 
 

@@ -205,6 +205,35 @@ class DetectorConfig:
     min_samples: int = 10
 
 
+def calibration_baseline(system, nbytes: int, *, background: Sequence = (),
+                         weight: float = 1.0, priority: int = 0):
+    """A pluggable detector baseline anchored on a calibrated system.
+
+    Returns a zero-arg callable yielding the expected spill->compute fetch
+    time for ``nbytes`` on ``system`` (a ``repro.fabric.System``, e.g.
+    ``from_profile(...)``) under the declared ``background`` — the same
+    contended estimate the drift sentinel predicts with, so the detector
+    and the sentinel share one notion of "expected". The plan is resolved
+    lazily on first call and cached (the detector polls it every round).
+    """
+    from repro.transport import Route
+
+    if system.kv_tiers is None:
+        raise ValueError(f"{system.name} has no spill tier: no fetch "
+                         "route to baseline")
+    cache: list = []
+
+    def _expected() -> float:
+        if not cache:
+            route = Route.resolve(system, system.kv_tiers[1],
+                                  system.compute)
+            cache.append(route.contended_transfer_time(
+                nbytes, background, weight=weight, priority=priority))
+        return cache[0]
+
+    return _expected
+
+
 class DegradationDetector:
     """Round-granular degradation detector.
 
@@ -212,16 +241,30 @@ class DegradationDetector:
     the *planned* fetch time drifting past ``drift_threshold`` x the
     expected (calibration-anchored) value, and the *observed* per-step
     completion tail inflating (``StragglerStats``). The detector fires
-    when drift is sustained for ``patience`` rounds or corroborated by the
-    straggler flag — and immediately on ``hard_fail`` (a tier that simply
-    disappeared). Once fired it stays fired; clearing is the recovery
-    loop's job, not the detector's.
+    when drift is sustained for ``patience`` rounds, corroborated by the
+    straggler flag or by an external witness (``observe(...,
+    corroborated=True)`` — e.g. the SLO monitor alerting while the
+    critical-path attribution blames a link) — and immediately on
+    ``hard_fail`` (a tier that simply disappeared). Once fired it stays
+    fired; clearing is the recovery loop's job, not the detector's.
+
+    The expectation is pluggable: pass a scalar ``expected_fetch_s`` (the
+    legacy anchor) or ``baseline=`` — any zero-arg callable returning the
+    current expected fetch seconds (``calibration_baseline`` builds the
+    calibrated one; the drift sentinel's predictions fit the same shape).
+    Both paths share this one drift computation.
     """
 
-    def __init__(self, expected_fetch_s: float,
+    def __init__(self, expected_fetch_s: Optional[float] = None,
                  cfg: DetectorConfig = DetectorConfig(),
-                 tracer=NULL_TRACER):
-        self.expected_fetch_s = float(expected_fetch_s)
+                 tracer=NULL_TRACER, *, baseline=None):
+        if (expected_fetch_s is None) == (baseline is None):
+            raise ValueError("pass exactly one of expected_fetch_s or "
+                             "baseline=")
+        if baseline is None:
+            anchor = float(expected_fetch_s)
+            baseline = lambda: anchor            # noqa: E731
+        self.baseline = baseline
         self.cfg = cfg
         self.tracer = tracer
         self.straggler = StragglerStats(window=cfg.straggler_window,
@@ -231,17 +274,24 @@ class DegradationDetector:
         self.detected = False
         self.detect_round: Optional[int] = None
 
+    @property
+    def expected_fetch_s(self) -> float:
+        """The current expectation (evaluated through the baseline)."""
+        return float(self.baseline())
+
     def drift(self, fetch_total_s: Optional[float]) -> Optional[float]:
         if fetch_total_s is None:
             return None
-        if self.expected_fetch_s <= 0:
+        expected = self.expected_fetch_s
+        if expected <= 0:
             return 1.0
-        return fetch_total_s / self.expected_fetch_s
+        return fetch_total_s / expected
 
     def observe(self, rnd: int, t: float,
                 fetch_total_s: Optional[float],
                 step_times: Sequence[float] = (),
-                hard_fail: bool = False) -> bool:
+                hard_fail: bool = False,
+                corroborated: bool = False) -> bool:
         """Feed one round's evidence; returns the (sticky) detected flag."""
         for dt in step_times:
             self.straggler.record(dt)
@@ -258,6 +308,7 @@ class DegradationDetector:
         if self.detected:
             return True
         if hard_fail or (drifting and (self.straggler.inflated
+                                       or corroborated
                                        or self.consecutive
                                        >= self.cfg.patience)):
             self.detected = True
@@ -267,6 +318,7 @@ class DegradationDetector:
                     "resilience.detect", ts=t,
                     track=("resilience", "detector"), cat="resilience",
                     round=rnd, drift=drift, hard_fail=hard_fail,
+                    corroborated=corroborated,
                     straggler_inflated=self.straggler.inflated)
                 self.tracer.metrics.set("resilience.detect_round", rnd)
                 self.tracer.metrics.add("resilience.detections", 1)
@@ -413,6 +465,7 @@ class RoundReport:
     detected: bool
     recovered: bool
     action: Optional[dict] = None    # RecoveryAction.to_json() if fired
+    top_contributors: Optional[dict] = None   # label -> count (attribution)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -432,9 +485,12 @@ class DegradedServeReport:
     recovery_time_s: Optional[float]
     violations_total: int            # SLO misses from the event on
     slo_s: float
+    attribution: Optional[dict] = None   # pooled critical-path summary
+    slo: Optional[dict] = None           # SLOMonitor.report() snapshot
+    drift_routes: Optional[dict] = None  # DriftSentinel.report() snapshot
 
     def to_json(self) -> dict:
-        return {
+        out = {
             "system": self.system, "reacted": self.reacted,
             "event_round": self.event_round,
             "detect_round": self.detect_round,
@@ -449,6 +505,13 @@ class DegradedServeReport:
             "slo_s": self.slo_s,
             "rounds": [dataclasses.asdict(r) for r in self.rounds],
         }
+        if self.attribution is not None:
+            out["attribution"] = self.attribution
+        if self.slo is not None:
+            out["slo"] = self.slo
+        if self.drift_routes is not None:
+            out["drift_routes"] = self.drift_routes
+        return out
 
 
 def _build_cache(cfg: DegradedServeConfig, tracer):
@@ -474,6 +537,7 @@ def _build_cache(cfg: DegradedServeConfig, tracer):
 def run_degraded_serve(schedule: DegradationSchedule, *,
                        cfg: DegradedServeConfig = DegradedServeConfig(),
                        react: bool = True, calibration_profile=None,
+                       slo=None, sentinel=None, recorder=None,
                        tracer=NULL_TRACER) -> DegradedServeReport:
     """Serve ``cfg.rounds`` simulated decode rounds while ``schedule``
     degrades the fabric; detect and (if ``react``) recover.
@@ -489,10 +553,30 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
     plan) on fitted link constants, exactly as ``simulate_paged_decode``
     does — detection drift is then measured against the machine as
     calibrated, not as the datasheet promises.
+
+    Observability hooks (all optional, all fed live inside the loop):
+    ``slo`` is a ``repro.obs.SLOMonitor`` (one built on the tracer when
+    tracing) fed each sequence's round completion under class
+    ``"interactive"``; with a tracer the per-round critical-path
+    attribution runs on the round's own event slice, its top contributors
+    land on each ``RoundReport``, and an SLO burn alert whose violating
+    requests blame a link corroborates the drift detector (so it can fire
+    a round earlier than bare patience). ``sentinel`` is a
+    ``repro.obs.DriftSentinel`` replaying each round's prefetch plan;
+    ``recorder`` is a ``repro.obs.FlightRecorder`` — used as the tracer
+    when none was passed, and snapshotted (with the violating requests'
+    attribution attached) at the first detector fire and the first
+    alerting SLO window.
     """
     from repro.fabric.contention import Flow
     from repro.fabric.systems import from_profile, get_system
     from repro.launch.serve import DecodeScheduler
+    from repro.obs.attribution import (attribute_requests,
+                                       attribution_summary, event_cursor,
+                                       events_since)
+
+    if recorder is not None and not tracer.enabled:
+        tracer = recorder
 
     if calibration_profile is not None:
         from repro.calibrate import CalibrationProfile
@@ -520,14 +604,22 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
     expected_fetch = ref_sched.prefetch_total
     slo_s = cfg.slo_slack * ref_sched.mean_completion
 
-    detector = DegradationDetector(expected_fetch, cfg.detector,
-                                   tracer=tracer)
+    detector = DegradationDetector(cfg=cfg.detector, tracer=tracer,
+                                   baseline=lambda: expected_fetch)
     recovery = RecoveryController(
         cache, fast_budget_frac=cfg.fast_budget_frac,
         prefetch_priority=max(1, cfg.prefetch_priority + 1),
         tracer=tracer)
+    monitor = slo
+    if monitor is None and tracer.enabled:
+        from repro.obs.slo import SLOMonitor
+        monitor = SLOMonitor(tracer=tracer)
+    if monitor is not None:
+        monitor.add_class("interactive", slo_s=slo_s)
 
     rounds: list[RoundReport] = []
+    viol_attrs: dict = {}            # (round, seq) -> RequestAttribution
+    snapped_detect = snapped_slo = False
     t = 0.0
     prio = cfg.prefetch_priority
     shed = False
@@ -560,6 +652,10 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
             # baseline with its pages on a removed tier: the round stalls
             # out its whole SLO window with nothing served
             detector.observe(r, t, None, hard_fail=True)
+            if monitor is not None:
+                for s in seqs:
+                    monitor.observe("interactive", slo_s, ts=t + slo_s,
+                                    violated=True)
             rounds.append(RoundReport(
                 round=r, t0=t, wall_s=slo_s, tokens_per_s=0.0,
                 fetch_total_s=None, drift=None,
@@ -570,13 +666,63 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
 
         bg = () if (shed or spill_gone) else (own_bg,)
         bg = bg + schedule.co_flows_at(r)
+        n0 = event_cursor(tracer) if tracer.enabled else 0
         sched = DecodeScheduler(
             cache, system=sys_r, background=bg, step_time=step_s,
             priority=prio, tracer=tracer).schedule(
                 seqs, cfg.gen, deadlines={s: slo_s for s in seqs})
         step_times = [sched.finish_time[s] / cfg.gen for s in seqs]
+
+        # Round-local observability: attribution on this round's event
+        # slice, SLO feed, drift-sentinel plan replay — before the
+        # detector, so a burning SLO whose violators blame a link can
+        # corroborate it this very round.
+        viol = sorted(sched.violations)
+        attrs: dict = {}
+        tops = None
+        if tracer.enabled:
+            attrs = attribute_requests(events_since(tracer, n0))
+        if monitor is not None:
+            for s in seqs:
+                monitor.observe("interactive", sched.finish_time[s],
+                                ts=t + sched.finish_time[s],
+                                violated=s in sched.violations)
+        if sentinel is not None:
+            plan_r = getattr(sched.plan, "transfer_plan", sched.plan)
+            if getattr(plan_r, "transfers", ()):
+                sentinel.observe_plan(plan_r, background=bg, ts=t)
+        corroborated = False
+        if attrs and monitor is not None \
+                and monitor.alerting("interactive"):
+            vt = [attrs[s].top_contributor for s in viol if s in attrs]
+            blamed = [x for x in vt if x and x.startswith("link_wait:")]
+            corroborated = bool(vt) and len(blamed) * 2 > len(vt)
+        if attrs:
+            for s in viol:
+                if s in attrs:
+                    viol_attrs[(r, s)] = attrs[s]
+            tops = {}
+            for s in (viol or seqs):
+                a = attrs.get(s)
+                if a is not None and a.top_contributor is not None:
+                    tops[a.top_contributor] = \
+                        tops.get(a.top_contributor, 0) + 1
+
         detected = detector.observe(r, t, sched.prefetch_total,
-                                    step_times=step_times)
+                                    step_times=step_times,
+                                    corroborated=corroborated)
+        if recorder is not None and attrs:
+            summary = attribution_summary(attrs,
+                                          rids=viol if viol else None)
+            if detected and not snapped_detect:
+                snapped_detect = True
+                recorder.snapshot(reason=f"detector_fire:round{r}", ts=t,
+                                  attribution=summary)
+            if (not snapped_slo and viol and monitor is not None
+                    and monitor.alerting("interactive")):
+                snapped_slo = True
+                recorder.snapshot(reason=f"slo_violation:round{r}", ts=t,
+                                  attribution=summary)
 
         if detected and react and not recovered:
             # act at the round boundary: replan on the degraded fabric,
@@ -599,7 +745,8 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
             fetch_total_s=sched.prefetch_total,
             drift=detector.drift(sched.prefetch_total),
             violations=dict(sched.violations), degraded=degraded,
-            detected=detected, recovered=recovered, action=action_json))
+            detected=detected, recovered=recovered, action=action_json,
+            top_contributors=tops))
         t += wall
 
     event_round = schedule.first_event_round
@@ -625,6 +772,7 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
         m = tracer.metrics
         m.set("resilience.recovery_frac", recovery_frac)
         m.set("resilience.violations_total", violations_total)
+    attribution = attribution_summary(viol_attrs) if viol_attrs else None
     return DegradedServeReport(
         system=cfg.system, reacted=react, rounds=tuple(rounds),
         event_round=event_round, detect_round=detector.detect_round,
@@ -633,4 +781,7 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
         recovery_frac=recovery_frac,
         detect_latency_rounds=detect_latency,
         recovery_time_s=recovery_time,
-        violations_total=violations_total, slo_s=slo_s)
+        violations_total=violations_total, slo_s=slo_s,
+        attribution=attribution,
+        slo=monitor.report() if monitor is not None else None,
+        drift_routes=sentinel.report() if sentinel is not None else None)

@@ -175,6 +175,8 @@ class DisaggReport:
     deadlines: dict              # seq -> SLO completion deadline (s)
     schedule: object             # launch.serve.DecodeSchedule
     plan: object                 # transport.TransferPlan of the shipment
+    attribution: Optional[dict] = None   # per-request critical-path
+    slo: Optional[dict] = None           # SLOMonitor.report() snapshot
 
     @property
     def overlap_speedup(self) -> float:
@@ -185,7 +187,7 @@ class DisaggReport:
         sched = self.schedule
         slack = {s: self.deadlines[s] - sched.finish_time[s]
                  for s in self.deadlines if s in sched.finish_time}
-        return {
+        out = {
             "system": self.system_name,
             "provenance": self.provenance,
             "roles": dataclasses.asdict(self.roles),
@@ -219,10 +221,15 @@ class DisaggReport:
             "mean_completion_s": round(sched.mean_completion, 6),
             "overlap_speedup": round(self.overlap_speedup, 3),
         }
+        if self.attribution is not None:
+            out["attribution"] = self.attribution
+        if self.slo is not None:
+            out["slo"] = self.slo
+        return out
 
 
 def run_disagg_serve(cfg: DisaggConfig = DisaggConfig(), *, system=None,
-                     calibration_profile=None,
+                     calibration_profile=None, slo=None,
                      tracer=NULL_TRACER) -> DisaggReport:
     """Simulate one disaggregated serve on ``cfg.system`` (or an explicit
     ``system`` — e.g. a degraded or calibrated one).
@@ -235,11 +242,22 @@ def run_disagg_serve(cfg: DisaggConfig = DisaggConfig(), *, system=None,
     steps as sequences become resident. Deadlines are SLO-shaped: each
     sequence must finish within ``slo_slack`` times its own uncontended
     ship+decode run, counted from its prefill completion.
+
+    With an enabled tracer the report carries the per-request critical-path
+    attribution (prefill -> ship-leg link waits -> scheduler wait ->
+    decode), and ``slo`` (a ``repro.obs.SLOMonitor``, or the default one
+    built when tracing) is fed one end-to-end latency per sequence under
+    class ``"interactive"`` — its snapshot rides along in the report.
     """
     import jax.numpy as jnp
 
     from repro.launch.serve import admission_schedule
+    from repro.obs.attribution import (attribute_requests,
+                                       attribution_summary, event_cursor,
+                                       events_since)
     from repro.serving.pager import PagedKVCache, PagerConfig
+
+    cursor = event_cursor(tracer) if tracer.enabled else 0
 
     if system is None:
         if calibration_profile is not None:
@@ -307,15 +325,38 @@ def run_disagg_serve(cfg: DisaggConfig = DisaggConfig(), *, system=None,
             pages_per_seq * cache.page_bytes, compression=compression)
     deadlines = {s: done[s] + cfg.slo_slack *
                  (uncontended + cfg.gen * step_time) for s in seqs}
+    seq_flows = {s: [f"ship{p}" for p in cache.tables[s]] for s in seqs}
+    starts = {s: s * cfg.prompt * cfg.prefill_us_per_token * 1e-6
+              for s in seqs}
     sched = admission_schedule(ready, plan, cfg.gen, step_time,
-                               deadlines=deadlines, tracer=tracer)
+                               deadlines=deadlines, seq_flows=seq_flows,
+                               starts=starts, prefill_done=done,
+                               tracer=tracer)
     report = DisaggReport(
         config=cfg, system_name=system.name,
         provenance=choice.route.provenance, roles=roles, choice=choice,
         pages_per_seq=pages_per_seq, page_bytes=cache.page_bytes,
         wire_page_bytes=wire_page, prefill_done=done, ready=ready,
         deadlines=deadlines, schedule=sched, plan=plan)
+    if tracer.enabled or slo is not None:
+        from repro.obs.slo import SLOMonitor
+        monitor = slo if slo is not None else SLOMonitor(tracer=tracer)
+        monitor.add_class(
+            "interactive",
+            slo_s=cfg.slo_slack * (uncontended + cfg.gen * step_time))
+        for s in seqs:
+            if s not in sched.finish_time:
+                continue
+            monitor.observe("interactive", sched.finish_time[s] - done[s],
+                            ts=sched.finish_time[s],
+                            violated=s in sched.violations)
+        report.slo = monitor.report()
     if tracer.enabled:
+        attrs = attribute_requests(events_since(tracer, cursor))
+        report.attribution = {
+            "requests": {s: a.to_json() for s, a in sorted(attrs.items())},
+            "summary": attribution_summary(attrs),
+        }
         m = tracer.metrics
         m.set("disagg.overlap_speedup", report.overlap_speedup,
               system=system.name)

@@ -1,0 +1,364 @@
+"""repro.obs attribution stack: critical-path walk, SLO monitor +
+log-scale histograms, drift sentinel, flight recorder, and the detector's
+pluggable baseline.
+
+Companion to test_obs.py (tracer/export/timeline mechanics) — these tests
+cover the consumers built on top: per-request latency attribution from the
+event stream, burn-rate alerting, calibration-anchored drift flagging, and
+the degraded-serve integration that wires them together.
+"""
+
+import math
+import random
+
+import pytest
+
+import hypothesis_compat  # noqa: F401  (skips cleanly when hypothesis absent)
+
+from repro.fabric.systems import get_system
+from repro.obs import (DriftSentinel, FlightRecorder, LatencyHistogram,
+                       SLOMonitor, Tracer, attribute_requests,
+                       attribution_summary, event_cursor, events_since,
+                       validate_chrome_trace)
+
+MiB = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# Critical-path walk on a hand-built event stream
+# ---------------------------------------------------------------------------
+
+
+def _hand_events():
+    """One request: prefill 0.5s, queue 0.5s + transfer 2.0s on the slow
+    link, 0.2s route tail, 0.8s scheduler wait, 2.0s decode."""
+    tr = Tracer(clock=lambda: 0.0)
+    lt = ("fabric", "links")
+    tr.instant("link", ts=0.0, track=lt, cat="fabric.link.meta",
+               link="slow", capacity=1e9)
+    tr.instant("link", ts=0.0, track=lt, cat="fabric.link.meta",
+               link="fast", capacity=1e12)
+    tr.async_begin("f0", id="f0", ts=1.0, track=("fabric", "flows"),
+                   cat="flow", src="a", dst="b", priority=1,
+                   links=["fast", "slow"])
+    tr.async_end("f0", id="f0", ts=3.5, track=("fabric", "flows"),
+                 cat="flow", drained_ts=3.0)
+    tr.instant("attrib.request", ts=0.0,
+               track=("scheduler", "attribution"), cat="attrib",
+               rid="r0", start=0.0, ready=3.2, flows=["f0"],
+               prefill_done=0.5)
+    tr.instant("sched.admit", ts=4.0, track=("scheduler", "admission"),
+               cat="sched", seq="r0")
+    tr.async_begin("seq r0", id="s0", ts=4.0, track=("scheduler", "steps"),
+                   cat="sched", seq="r0")
+    tr.async_end("seq r0", id="s0", ts=6.0, track=("scheduler", "steps"),
+                 cat="sched")
+    return tr
+
+
+def test_attribution_walk_hand_stream():
+    attrs = attribute_requests(_hand_events())
+    a = attrs["r0"]
+    # bottleneck = lowest-capacity link on the route; the chained-DMA
+    # queue gap (0.5 -> 1.0) is charged to the same link as the transfer
+    assert [(s.kind, s.label) for s in a.segments] == [
+        ("prefill", "prefill"),
+        ("link_queue", "link_wait:slow[p1]"),
+        ("link_wait", "link_wait:slow[p1]"),
+        ("transfer_tail", "transfer_tail"),
+        ("sched_wait", "sched_wait"),
+        ("decode_compute", "decode_compute"),
+    ]
+    assert a.total == pytest.approx(6.0)
+    # every moment between start and finish charged exactly once
+    assert sum(s.duration for s in a.segments) == pytest.approx(a.total)
+    bd = a.breakdown()
+    assert bd["link_wait:slow[p1]"] == pytest.approx(2.5)
+    assert a.top_contributor == "link_wait:slow[p1]"
+    j = a.to_json()
+    assert j["finish_s"] == pytest.approx(6.0)
+    assert sum(s["duration_s"] for s in j["segments"]) == \
+        pytest.approx(j["total_s"])
+
+
+def test_attribution_summary_pools_and_filters():
+    attrs = attribute_requests(_hand_events())
+    summ = attribution_summary(attrs)
+    assert summ["requests"] == 1
+    assert summ["top_frac"] == {"link_wait:slow[p1]": 1.0}
+    assert next(iter(summ["seconds_by_label"])) == "link_wait:slow[p1]"
+    filt = attribution_summary(attrs, rids=["absent"])
+    assert filt["requests"] == 0 and filt["top_frac"] == {}
+
+
+def test_event_cursor_survives_ring_drops():
+    rec = FlightRecorder(capacity=4, clock=lambda: 0.0)
+    for i in range(3):
+        rec.instant(f"a{i}", ts=float(i))
+    cur = event_cursor(rec)
+    for i in range(6):
+        rec.instant(f"b{i}", ts=float(10 + i))
+    # the cursor counts emissions, so drops before it just shrink the
+    # slice to the oldest retained event instead of mis-indexing
+    assert [e.name for e in events_since(rec, cur)] == \
+        ["b2", "b3", "b4", "b5"]
+
+
+# ---------------------------------------------------------------------------
+# Latency histograms
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_percentiles_within_error_bound():
+    rng = random.Random(0)
+    samples = sorted(math.exp(rng.gauss(-6.0, 1.0)) for _ in range(5000))
+    h = LatencyHistogram()
+    for v in samples:
+        h.record(v)
+    assert h.rel_error_bound < 0.02
+    for q in (50, 90, 95, 99):
+        rank = min(len(samples), max(1, math.ceil(q / 100 * len(samples))))
+        exact = samples[rank - 1]
+        est = h.percentile(q)
+        assert abs(est - exact) / exact <= h.rel_error_bound + 1e-12
+
+
+def test_histogram_merge_and_json_roundtrip():
+    vals = (1e-4, 2e-3, 5e-2, 3.0)
+    a, b = LatencyHistogram(), LatencyHistogram()
+    for v in vals[:2]:
+        a.record(v)
+    for v in vals[2:]:
+        b.record(v)
+    merged = LatencyHistogram.from_json(a.to_json()).merge(b)
+    whole = LatencyHistogram()
+    for v in vals:
+        whole.record(v)
+    assert merged.count == 4
+    assert merged.counts == whole.counts
+    with pytest.raises(ValueError, match="shapes differ"):
+        a.merge(LatencyHistogram(buckets_per_decade=32))
+
+
+def test_histogram_clamps_out_of_range():
+    h = LatencyHistogram(lo=1e-3, hi=1.0)
+    for v in (1e-9, -1.0, 50.0):
+        h.record(v)
+    assert h.count == 3
+    assert h.percentile(1) == h.lo      # under/negative -> underflow bucket
+    assert h.percentile(100) == h.hi    # overflow reported at the cap
+
+
+# ---------------------------------------------------------------------------
+# SLO monitor: burn-rate alerting
+# ---------------------------------------------------------------------------
+
+
+def test_slo_monitor_burn_alert_rising_edge_and_clear():
+    alerts = []
+    tr = Tracer(clock=lambda: 0.0)
+    mon = SLOMonitor({"api": 0.1}, budget_frac=0.1, burn_threshold=2.0,
+                     short_window=4, long_window=8, min_samples=4,
+                     tracer=tr,
+                     on_alert=lambda cls, info: alerts.append(cls))
+    for i in range(4):
+        assert mon.observe("api", 0.01, ts=float(i)) is False
+    for i in range(4):
+        mon.observe("api", 0.5, ts=4.0 + i)
+    assert mon.alerting("api")
+    assert alerts == ["api"]            # one rising edge, not one per obs
+    for i in range(8):
+        mon.observe("api", 0.01, ts=10.0 + i)
+    assert not mon.alerting("api")
+    names = [e.name for e in tr.events]
+    assert "slo.burn_alert" in names and "slo.burn_clear" in names
+    rep = mon.report()["api"]
+    assert rep["violations"] == 4
+    assert rep["alerts"] == 1
+    assert rep["count"] == 16
+    assert rep["p50_s"] == pytest.approx(0.01, rel=0.02)
+
+
+def test_slo_monitor_explicit_verdict_overrides_budget():
+    mon = SLOMonitor()
+    mon.observe("c", 5.0)                       # no budget -> no violation
+    mon.observe("c", 0.001, violated=True)      # scheduler's own verdict
+    rep = mon.report()["c"]
+    assert rep["slo_s"] is None
+    assert rep["violations"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Drift sentinel
+# ---------------------------------------------------------------------------
+
+
+def _observe_route(sentinel, system, src, dst, n, *, ts0=0.0):
+    from repro.transport import PageTransfer, Route, plan_transfers
+    route = Route.resolve(system, src, dst)
+    for i in range(n):
+        plan = plan_transfers(route,
+                              (PageTransfer(f"{src}-{i}", 8 * MiB),))
+        sentinel.observe_plan(plan, ts=ts0 + i)
+
+
+def test_drift_sentinel_flags_degraded_route_only():
+    from repro.runtime.degrade import host_link_degraded
+    base = get_system("tpu_v5e")
+    deg = host_link_degraded().degraded_system(base, 11)  # post-event view
+    tr = Tracer(clock=lambda: 0.0)
+    sent = DriftSentinel(base, tracer=tr, min_obs=3)
+    _observe_route(sent, deg, "host_dram", "chip0", 4)
+    _observe_route(sent, deg, "hbm1", "chip0", 4)
+    assert sent.flagged_routes() == ["host_dram->chip0"]
+    assert sent.drifting_routes() == ["host_dram->chip0"]
+    rep = sent.report()
+    assert rep["routes"]["hbm1->chip0"]["flagged"] is False
+    assert rep["routes"]["hbm1->chip0"]["median_ratio"] == \
+        pytest.approx(1.0, rel=1e-6)
+    assert rep["routes"]["host_dram->chip0"]["median_ratio"] > 1.5
+    flags = [e for e in tr.events if e.name == "drift.flag"]
+    assert [e.args["route"] for e in flags] == ["host_dram->chip0"]
+
+
+def test_drift_sentinel_predict_none_for_unknown_route():
+    class FakeRoute:
+        src, dst = "no_such_tier", "chip0"
+    sent = DriftSentinel(get_system("tpu_v5e"))
+    assert sent.predict(FakeRoute, 1024) is None
+
+
+def test_drift_sentinel_ignores_empty_plans():
+    class EmptyPlan:
+        transfers = ()
+    sent = DriftSentinel(get_system("tpu_v5e"))
+    assert sent.observe_plan(EmptyPlan()) is None
+    assert sent.report()["routes"] == {}
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_flight_recorder_forwards_and_counts_drops():
+    full = Tracer(clock=lambda: 0.0)
+    rec = FlightRecorder(capacity=2, forward=full)
+    for i in range(5):
+        rec.instant(f"e{i}", ts=float(i))
+    assert rec.emitted == 5
+    assert rec.dropped == 3
+    assert len(rec.events) == 2
+    # the forwarded tracer keeps the full stream the ring truncated
+    assert [e.name for e in full.events] == [f"e{i}" for i in range(5)]
+
+
+def test_flight_recorder_snapshot_carries_attribution():
+    rec = FlightRecorder(capacity=16, clock=lambda: 0.0)
+    rec.instant("x", ts=1.0)
+    snap = rec.snapshot(reason="unit", attribution={"requests": 0})
+    validate_chrome_trace(snap)
+    md = snap["metadata"]
+    assert md["reason"] == "unit"
+    assert md["attribution"] == {"requests": 0}
+    assert md["emitted"] == 1 and md["dropped"] == 0
+    assert rec.snapshots[-1] is snap
+
+
+# ---------------------------------------------------------------------------
+# Detector: pluggable baseline + corroboration
+# ---------------------------------------------------------------------------
+
+
+def test_detector_positional_scalar_still_works():
+    from repro.runtime.degrade import DegradationDetector, DetectorConfig
+    det = DegradationDetector(1e-3, DetectorConfig(patience=2))
+    assert det.expected_fetch_s == pytest.approx(1e-3)
+    assert det.drift(2e-3) == pytest.approx(2.0)
+
+
+def test_detector_pluggable_baseline_is_live():
+    from repro.runtime.degrade import DegradationDetector
+    vals = iter([1e-3, 2e-3])
+    det = DegradationDetector(baseline=lambda: next(vals))
+    assert det.drift(2e-3) == pytest.approx(2.0)
+    assert det.drift(2e-3) == pytest.approx(1.0)  # baseline re-evaluated
+
+
+def test_detector_requires_exactly_one_expectation():
+    from repro.runtime.degrade import DegradationDetector
+    with pytest.raises(ValueError, match="exactly one"):
+        DegradationDetector()
+    with pytest.raises(ValueError, match="exactly one"):
+        DegradationDetector(1e-3, baseline=lambda: 1e-3)
+
+
+def test_detector_corroboration_fires_before_patience():
+    from repro.runtime.degrade import DegradationDetector, DetectorConfig
+    cfg = DetectorConfig(patience=3)
+    solo = DegradationDetector(1e-3, cfg)
+    corr = DegradationDetector(1e-3, cfg)
+    # same single drifting round: patience alone holds fire, attribution
+    # corroboration (SLO burn + link blamed) releases it
+    assert solo.observe(0, 0.0, 5e-3) is False
+    assert corr.observe(0, 0.0, 5e-3, corroborated=True) is True
+    assert corr.detect_round == 0
+
+
+def test_calibration_baseline_matches_route_estimate():
+    from repro.runtime.degrade import calibration_baseline
+    from repro.transport import Route
+    base = get_system("tpu_v5e")
+    fn = calibration_baseline(base, 8 * MiB)
+    route = Route.resolve(base, base.kv_tiers[1], base.compute)
+    assert fn() == pytest.approx(
+        route.contended_transfer_time(8 * MiB, ()))
+
+
+# ---------------------------------------------------------------------------
+# Integration: disagg + degraded serve reports carry the obs sections
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_report_attribution_covers_requests():
+    from repro.serving.disagg import DisaggConfig, run_disagg_serve
+    tr = Tracer(clock=lambda: 0.0)
+    rep = run_disagg_serve(DisaggConfig(requests=3), tracer=tr)
+    attr = rep.attribution
+    assert set(attr["requests"]) == {0, 1, 2}
+    for a in attr["requests"].values():
+        assert sum(s["duration_s"] for s in a["segments"]) == \
+            pytest.approx(a["total_s"])
+        assert a["segments"][0]["kind"] == "prefill"
+    assert attr["summary"]["requests"] == 3
+    assert rep.slo["interactive"]["count"] == 3
+    assert "attribution" in rep.to_json() and "slo" in rep.to_json()
+
+
+def test_degraded_serve_reports_obs_sections():
+    from repro.runtime.degrade import host_link_degraded, run_degraded_serve
+    rec = FlightRecorder(capacity=32768, clock=lambda: 0.0)
+    sent = DriftSentinel(get_system("tpu_v5e"), tracer=rec)
+    rep = run_degraded_serve(host_link_degraded(), react=False,
+                             sentinel=sent, recorder=rec)
+    # pooled attribution over the SLO violators blames a link wait
+    assert rep.attribution["requests"] > 0
+    top = next(iter(rep.attribution["top_counts"]))
+    assert top.startswith("link_wait:")
+    # the monitor saw every request, and the degraded route is flagged
+    cfg_requests = 6 * 12                       # DegradedServeConfig defaults
+    assert rep.slo["interactive"]["count"] == cfg_requests
+    assert rep.slo["interactive"]["violations"] >= rep.violations_total > 0
+    assert rep.drift_routes["flagged"] == ["host_dram->chip0"]
+    # the recorder snapped on the violation, and the snapshot exports clean
+    assert rec.snapshots
+    for snap in rec.snapshots:
+        validate_chrome_trace(snap)
+        assert "attribution" in snap["metadata"]
+    j = rep.to_json()
+    assert {"attribution", "slo", "drift_routes"} <= set(j)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -261,6 +261,116 @@ def test_utilization_never_exceeds_capacity(specs):
 
 
 # ---------------------------------------------------------------------------
+# LinkTimeline edge cases: single sample, overlapping classes, unsorted ts
+# ---------------------------------------------------------------------------
+
+
+def _emit_link(tr, samples, link="lk", capacity=100.0):
+    tr.instant("link", ts=min((ts for ts, _ in samples), default=0.0),
+               track=("fabric", f"link {link}"), cat="fabric.link.meta",
+               link=link, capacity=capacity)
+    for ts, fr in samples:
+        tr.counter(link, fr, ts=ts, track=("fabric", f"link {link}"),
+                   cat="fabric.link")
+
+
+def test_timeline_single_sample_moves_no_bytes():
+    """One counter sample bounds no interval: the integral is zero, but
+    the instantaneous reads still work."""
+    tr = Tracer(clock=lambda: 0.0)
+    _emit_link(tr, [(1.0, {"p0": 0.5})])
+    tl = link_timelines(tr)["lk"]
+    assert tl.bytes_moved() == 0.0
+    assert tl.bytes_by_class() == {}
+    assert tl.max_utilization() == 0.5
+    assert tl.end_ts == 1.0
+
+
+def test_timeline_overlapping_qos_classes_split_bytes():
+    """Two classes sharing one link at one instant: per-class integrals
+    split the capacity by each class's fraction and sum to the total."""
+    tr = Tracer(clock=lambda: 0.0)
+    _emit_link(tr, [(0.0, {"p0": 0.25, "p1": 0.75}),
+                    (2.0, {"p0": 0.0, "p1": 0.0})], capacity=10.0)
+    tl = link_timelines(tr)["lk"]
+    by = tl.bytes_by_class()
+    assert by["p0"] == pytest.approx(0.25 * 10.0 * 2.0)
+    assert by["p1"] == pytest.approx(0.75 * 10.0 * 2.0)
+    assert tl.bytes_moved() == pytest.approx(sum(by.values()))
+    assert tl.max_utilization() == pytest.approx(1.0)
+
+
+def test_timeline_out_of_order_samples_are_sorted():
+    """Samples arriving out of timestamp order (merged shards, async end
+    emission) must reconstruct the same piecewise-constant function."""
+    tr = Tracer(clock=lambda: 0.0)
+    _emit_link(tr, [(2.0, {"p0": 0.0}), (0.0, {"p0": 1.0}),
+                    (1.0, {"p0": 0.5})], capacity=8.0)
+    tl = link_timelines(tr)["lk"]
+    assert [ts for ts, _ in tl.samples] == [0.0, 1.0, 2.0]
+    assert tl.bytes_moved() == pytest.approx(1.0 * 8.0 + 0.5 * 8.0)
+
+
+# ---------------------------------------------------------------------------
+# Incremental writer + ring-truncated (recorder) export
+# ---------------------------------------------------------------------------
+
+
+def test_incremental_writer_matches_one_shot():
+    """Chunked extends produce byte-identical output to the one-shot
+    export — the flight recorder's incremental path is not a second
+    format."""
+    from repro.obs import ChromeTraceWriter
+    tr = Tracer(clock=lambda: 0.0)
+    simulate(get_system("tpu_v5e").fabric, _qos_flows(), tracer=tr)
+    w = ChromeTraceWriter()
+    events = list(tr.events)
+    for i in range(0, len(events), 7):
+        w.extend(events[i:i + 7])
+    assert json.dumps(w.trace(), sort_keys=True) == \
+        json.dumps(chrome_trace(tr), sort_keys=True)
+    validate_chrome_trace(w.trace())
+
+
+def test_recorder_trace_repairs_truncated_stream():
+    from repro.obs import recorder_trace
+    from repro.obs.trace import TraceEvent
+    trk = ("p", "t")
+    evs = [
+        TraceEvent("E", "lost", 0.5, trk, "", None, None),       # orphan E
+        TraceEvent("e", "flow0", 0.6, trk, "flow", "f0", None),  # orphan e
+        TraceEvent("B", "outer", 1.0, trk, "", None, None),      # dangling
+        TraceEvent("b", "flow1", 1.5, trk, "flow", "f1", None),  # dangling
+        TraceEvent("i", "mark", 2.0, trk, "", None, None),
+    ]
+    trace = recorder_trace(evs, metadata={"reason": "test"})
+    validate_chrome_trace(trace)
+    assert trace["metadata"]["reason"] == "test"
+    phs = [e["ph"] for e in trace["traceEvents"] if e["ph"] != "M"]
+    assert phs.count("E") == 1 and phs.count("e") == 1
+    synthetic = [e for e in trace["traceEvents"]
+                 if (e.get("args") or {}).get("truncated")]
+    assert len(synthetic) == 2
+
+
+def test_flight_recorder_snapshot_roundtrips_validation(tmp_path):
+    """A ring that truncated mid-run still snapshots to a structurally
+    valid Chrome trace, and ``dump`` writes the same thing to disk."""
+    from repro.obs import FlightRecorder
+    rec = FlightRecorder(capacity=8, clock=lambda: 0.0)
+    simulate(get_system("tpu_v5e").fabric, _qos_flows(), tracer=rec)
+    assert rec.dropped > 0                     # the ring actually truncated
+    snap = rec.snapshot(reason="test")
+    validate_chrome_trace(snap)
+    assert snap["metadata"]["dropped"] == rec.dropped
+    path = tmp_path / "dump.json"
+    rec.dump(str(path))
+    on_disk = json.load(open(path))
+    validate_chrome_trace(on_disk)
+    assert on_disk["metadata"]["reason"] == "test"
+
+
+# ---------------------------------------------------------------------------
 # Harness: Timing.n_reruns surfaces in Row.csv without breaking the format
 # ---------------------------------------------------------------------------
 
