@@ -14,6 +14,9 @@ and ``repro.fabric`` (model):
   validate  — Cohet-style accountability: replay interference/qos
               scenarios through fabric.sim on the calibrated constants
               and report predicted-vs-measured relative error
+  recal     — AutoRecalibrator: on a DriftSentinel flag, re-probe only
+              the drifted route against the live fabric, robust-refit,
+              hot-swap the constants and acknowledge the flag
 
 Calibrated constants flow to every planner through
 ``fabric.systems.from_profile(profile)`` -> ``TierTopology.from_fabric``:
@@ -25,6 +28,7 @@ from repro.calibrate.fit import (DEFAULT_MAX_DISPERSION, fit_profile,
 from repro.calibrate.profile import (PROFILE_VERSION, CalibrationProfile,
                                      LinkEstimate, LinkSample, ProfileError,
                                      machine_metadata)
+from repro.calibrate.recal import AutoRecalibrator, RecalResult
 from repro.calibrate.runner import (CalibrationRunner, TruthConfig,
                                     ground_truth_system)
 from repro.calibrate.validate import (REPLAY_SCENARIOS, FlowError,
@@ -36,6 +40,7 @@ __all__ = [
     "PROFILE_VERSION", "machine_metadata",
     "fit_profile", "fit_route", "sample_weight", "DEFAULT_MAX_DISPERSION",
     "CalibrationRunner", "TruthConfig", "ground_truth_system",
+    "AutoRecalibrator", "RecalResult",
     "validate_scenarios", "validate_samples", "ValidationReport",
     "ScenarioValidation", "FlowError", "REPLAY_SCENARIOS",
 ]

@@ -95,6 +95,7 @@ class CalibrationRunner:
     def __init__(self, system_name: str = "tpu_v5e", *,
                  source: str = "emulated",
                  truth: Optional[TruthConfig] = None,
+                 truth_system=None,
                  sizes: Sequence[int] = DEFAULT_SIZES,
                  repeats: int = 3,
                  iters: int = 7,
@@ -107,7 +108,12 @@ class CalibrationRunner:
         self.system = get_system(system_name)
         self.source = source
         self.truth = truth or TruthConfig()
-        self.truth_system = ground_truth_system(system_name, self.truth)
+        # truth_system override: probe a caller-supplied live System
+        # (e.g. the degraded serving fabric the AutoRecalibrator
+        # re-measures) instead of the synthetic TruthConfig machine
+        self.truth_system = (truth_system if truth_system is not None
+                             else ground_truth_system(system_name,
+                                                      self.truth))
         self.sizes = tuple(sizes)
         self.repeats = repeats            # samples per (route, size)
         self.iters = iters                # timing repetitions per sample
@@ -160,8 +166,11 @@ class CalibrationRunner:
             out.append((tier, node, self.system.compute))
         return out
 
-    def run(self) -> list:
-        """Collect all samples (the fitter's input).
+    def run(self, routes: Optional[list] = None) -> list:
+        """Collect samples (the fitter's input); ``routes`` narrows the
+        probe to a subset of ``(tier, src, dst)`` routes — how the
+        auto-recalibrator re-measures *only* the drifted route instead of
+        re-running the full calibration pass.
 
         The noise guard lives here first: a sample whose dispersion exceeds
         ``max_dispersion`` is re-measured up to ``max_reruns`` times and
@@ -169,7 +178,8 @@ class CalibrationRunner:
         in the sample for the fitter to down-weight.
         """
         samples = []
-        routes = self.routes()
+        if routes is None:
+            routes = self.routes()
         if self.source == "jax" and not any(t in self._JAX_TIERS
                                             for t, _, _ in routes):
             raise ValueError(

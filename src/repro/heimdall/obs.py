@@ -29,6 +29,22 @@ CI-enforced through ``BENCH_obs.json``:
   * ``obs_trace_export``        — the Chrome trace-event export of that
                                   run must pass structural validation
                                   (sorted, matched B/E + async pairs).
+  * ``obs_ledger``              — the BandwidthLedger's per-(link, QoS,
+                                  purpose, request-class) charges must
+                                  reconcile (<= 1e-6) with the FlowResult
+                                  bytes, the LinkTimeline integrals and
+                                  the ``fabric.link.bytes`` counters.
+  * ``obs_efficiency``          — on the host-link-halved scenario the
+                                  ledger's goodput-vs-calibrated-ceiling
+                                  map must name the degraded link as the
+                                  lowest-efficiency one.
+  * ``obs_recalibration``       — the closed drift loop: flag ->
+                                  single-route re-probe -> refit ->
+                                  hot-swap must bring the post-swap drift
+                                  ratio under 1.1 (refit ETA within 5%
+                                  of observation) and clear the flag.
+  * ``obs_openmetrics``         — the OpenMetrics exposition over that
+                                  scenario must be structurally valid.
 
 ``obs_summary()`` condenses the family into the ``BENCH_obs.json`` schema
 CI tracks.
@@ -479,8 +495,207 @@ def obs_histogram() -> list:
     return rows
 
 
+# --------------------------------------------------------------------------
+# Bandwidth ledger / efficiency / auto-recalibration (PR 10 fleet telemetry)
+# --------------------------------------------------------------------------
+
+MAX_LEDGER_REL_ERR = 1e-6        # ledger vs FlowResult / timeline bytes
+MAX_POST_RECAL_RATIO = 1.1       # drift ratio after the constants hot-swap
+MAX_RECAL_ETA_REL_ERR = 0.05     # refit fetch ETA vs observation
+
+
+@functools.lru_cache(maxsize=1)
+def _recal_obs() -> dict:
+    """The drift loop *closed*: the host-link-halved serve with
+    ``recalibrate=True`` — flag fires, the one drifted route is re-probed
+    against the degraded fabric, the refit constants hot-swap into the
+    sentinel, and post-swap rounds predict at ratio ~1.0 again.
+
+    A separate fixture from ``_resilience_obs`` on purpose: that one's
+    sticky flag must *survive* (the no-false-positive check asserts the
+    flagged set), while recalibration acknowledges flags by design. Four
+    healthy-route probes ride on the same tracer so the ledger's
+    efficiency map carries an uncontended reference link (~1.0) above the
+    degraded one.
+    """
+    from repro.fabric.systems import from_profile
+    from repro.obs import BandwidthLedger, DriftSentinel, link_ceilings
+    from repro.runtime.degrade import host_link_degraded, run_degraded_serve
+    from repro.transport import PageTransfer, Route, plan_transfers
+
+    profile = _obs_profile()
+    schedule = host_link_degraded()
+    calibrated = from_profile(profile, preset="tpu_v5e")
+    tr = Tracer(clock=lambda: 0.0)
+    sent = DriftSentinel(profile, preset="tpu_v5e", tracer=tr)
+    rep = run_degraded_serve(schedule, react=True,
+                             calibration_profile=profile,
+                             sentinel=sent, recalibrate=True, tracer=tr)
+    deg = schedule.degraded_system(calibrated, 11)
+    route = Route.resolve(deg, "hbm1", "chip0")
+    for i in range(4):
+        plan_transfers(route, (PageTransfer(f"probe{i}", 8 * MiB),),
+                       tracer=tr)
+    ledger = BandwidthLedger.from_tracer(
+        tr, ceilings=link_ceilings(calibrated))
+    return {"report": rep, "sentinel": sent, "tracer": tr,
+            "ledger": ledger}
+
+
+@functools.lru_cache(maxsize=1)
+def _ledger_stats() -> dict:
+    """Conservation numbers shared by the rows, the summary, and CI: the
+    golden contended-prefetch sim reconciled three ways (FlowResult bytes,
+    LinkTimeline integrals, fabric.link.bytes counters), plus the whole
+    multi-round recalibration scenario's per-flow conservation."""
+    from repro.obs import BandwidthLedger
+
+    tracer, results = _traced_sim()
+    led = BandwidthLedger.from_tracer(tracer)
+    flow_rec = led.reconcile_flow_bytes(results)
+    tl_rec = led.reconcile_timelines(link_timelines(tracer))
+    m_rec = led.reconcile_metrics(tracer.metrics)
+    cons = led.flow_conservation()
+    scen = _recal_obs()
+    scen_cons = scen["ledger"].flow_conservation()
+    scen_m = scen["ledger"].reconcile_metrics(scen["tracer"].metrics)
+    return {
+        "golden": {
+            "n_flows": cons["n_flows"],
+            "flow_conservation_rel_err": cons["max_rel_err"],
+            "flow_bytes_rel_err": flow_rec["rel_err"],
+            "timeline_rel_err": tl_rec["max_rel_err"],
+            "metrics_rel_err": m_rec["max_rel_err"],
+            "entries": led.entries(),
+        },
+        "recal_scenario": {
+            "n_flows": scen_cons["n_flows"],
+            "flow_conservation_rel_err": scen_cons["max_rel_err"],
+            "metrics_rel_err": scen_m["max_rel_err"],
+        },
+        "max_rel_err": max(
+            cons["max_rel_err"], flow_rec["rel_err"], tl_rec["max_rel_err"],
+            m_rec["max_rel_err"], scen_cons["max_rel_err"],
+            scen_m["max_rel_err"]),
+    }
+
+
+def obs_ledger() -> list:
+    """Bandwidth ledger conservation: the per-(link, QoS, purpose,
+    request-class) charges must integrate back to the same bytes the
+    FlowResults, LinkTimelines, and metric counters report."""
+    stats = _ledger_stats()
+    g = stats["golden"]
+    rows = [Row("obs_ledger/max_rel_err", 0.0,
+                f"rel_err={stats['max_rel_err']:.2e};"
+                f"threshold={MAX_LEDGER_REL_ERR:.0e}")]
+    rows.append(Row("obs_ledger/golden", 0.0,
+                    f"flows={g['n_flows']};"
+                    f"flow_bytes={g['flow_bytes_rel_err']:.2e};"
+                    f"timeline={g['timeline_rel_err']:.2e};"
+                    f"metrics={g['metrics_rel_err']:.2e}"))
+    for e in g["entries"]:
+        rows.append(Row(
+            f"obs_ledger/{e['link']}/{e['qos']}/{e['purpose']}", 0.0,
+            f"bytes={e['bytes']:.0f};request={e['request_class']}"))
+    s = stats["recal_scenario"]
+    rows.append(Row("obs_ledger/recal_scenario", 0.0,
+                    f"flows={s['n_flows']};"
+                    f"conservation={s['flow_conservation_rel_err']:.2e};"
+                    f"metrics={s['metrics_rel_err']:.2e}"))
+    return rows
+
+
+@functools.lru_cache(maxsize=1)
+def _efficiency_stats() -> dict:
+    """Per-link efficiency on the recalibration scenario; the headline is
+    that the lowest-efficiency link *is* the degraded one, by name."""
+    eff = _recal_obs()["ledger"].efficiency()
+    lowest = min(eff, key=lambda k: eff[k]["efficiency"]) if eff else None
+    return {"links": {k: v["efficiency"] for k, v in eff.items()},
+            "lowest": lowest,
+            "degraded_link": _degraded_link(),
+            "degraded_is_lowest": lowest == _degraded_link()}
+
+
+def obs_efficiency() -> list:
+    """Ledger efficiency headline: bottlenecked goodput vs the calibrated
+    ceiling, per link — the degraded link must rank lowest, by name."""
+    stats = _efficiency_stats()
+    rows = [Row("obs_efficiency/lowest", 0.0,
+                f"link={stats['lowest']};"
+                f"degraded={stats['degraded_link']};"
+                f"named={int(stats['degraded_is_lowest'])}")]
+    for lbl, eff in sorted(stats["links"].items()):
+        rows.append(Row(f"obs_efficiency/{lbl}", 0.0,
+                        f"efficiency={eff:.3f}"))
+    return rows
+
+
+@functools.lru_cache(maxsize=1)
+def _recal_stats() -> dict:
+    """Recalibration convergence numbers (rows + summary + CI): for each
+    hot-swap, the post-swap drift ratios and how far the refit route ETA
+    sits from what the sentinel then observes."""
+    scen = _recal_obs()
+    rep = scen["report"]
+    recs = []
+    max_post = eta_err = 0.0
+    for rec in (rep.recal or ()):
+        posts = rec.get("post_ratios") or []
+        med = statistics.median(posts) if posts else 0.0
+        recs.append({**rec, "median_post_ratio": med})
+        if posts:
+            max_post = max(max_post, max(posts))
+            eta_err = max(eta_err, abs(med - 1.0))
+    sent_rep = scen["sentinel"].report()
+    return {"n_recals": len(recs), "recals": recs,
+            "detect_round": rep.detect_round,
+            "max_post_ratio": max_post,
+            "eta_rel_err": eta_err,
+            "flagged_after": sent_rep["flagged"]}
+
+
+def obs_recalibration() -> list:
+    """Closed drift loop: flag -> single-route re-probe -> refit ->
+    hot-swap; post-swap drift ratio back under 1.1 and the refit ETA
+    within 5% of observation, with the flag acknowledged."""
+    stats = _recal_stats()
+    rows = [Row("obs_recal/convergence", 0.0,
+                f"recals={stats['n_recals']};"
+                f"max_post_ratio={stats['max_post_ratio']:.4f};"
+                f"eta_rel_err={stats['eta_rel_err']:.4f};"
+                f"flags_left={len(stats['flagged_after'])}")]
+    for rec in stats["recals"]:
+        rows.append(Row(
+            f"obs_recal/{rec['route']}", 0.0,
+            f"round={rec['round']};"
+            f"old_bw={rec['old_bandwidth']:.3e};"
+            f"fitted_bw={rec['fitted_bandwidth']:.3e};"
+            f"median_post_ratio={rec['median_post_ratio']:.4f};"
+            f"samples={rec['n_samples']}"))
+    return rows
+
+
+def obs_openmetrics() -> list:
+    """The OpenMetrics exposition over the recalibration scenario's
+    metrics + ledger must be structurally sound (typed families, EOF)."""
+    from repro.obs import openmetrics_text
+
+    scen = _recal_obs()
+    text = openmetrics_text(metrics=scen["tracer"].metrics,
+                            ledger=scen["ledger"])
+    lines = text.splitlines()
+    types = sum(1 for ln in lines if ln.startswith("# TYPE "))
+    samples = sum(1 for ln in lines if ln and not ln.startswith("#"))
+    ok = text.endswith("# EOF\n") and types > 0 and samples > 0
+    return [Row("obs_openmetrics/exposition", 0.0,
+                f"families={types};samples={samples};valid={int(ok)}")]
+
+
 ALL_OBS = [obs_tracer_overhead, obs_byte_conservation, obs_trace_export,
-           obs_attribution, obs_drift, obs_recorder, obs_histogram]
+           obs_attribution, obs_drift, obs_recorder, obs_histogram,
+           obs_ledger, obs_efficiency, obs_recalibration, obs_openmetrics]
 
 
 def obs_summary() -> dict:
@@ -553,9 +768,18 @@ def obs_summary() -> dict:
                        for k, v in sent_report["routes"].items()},
         },
         "recorder": recorder,
+        "ledger": _ledger_stats(),
+        "efficiency": _efficiency_stats(),
+        "recalibration": _recal_stats(),
+        "openmetrics": {
+            "valid": "valid=1" in obs_openmetrics()[0].derived,
+        },
         "thresholds": {"max_overhead_frac": MAX_OVERHEAD_FRAC,
                        "max_byte_rel_err": MAX_BYTE_REL_ERR,
                        "max_attr_overhead_frac": MAX_OVERHEAD_FRAC,
                        "max_hist_rel_err": MAX_HIST_REL_ERR,
-                       "min_attr_top_frac": MIN_ATTR_TOP_FRAC},
+                       "min_attr_top_frac": MIN_ATTR_TOP_FRAC,
+                       "max_ledger_rel_err": MAX_LEDGER_REL_ERR,
+                       "max_post_recal_ratio": MAX_POST_RECAL_RATIO,
+                       "max_recal_eta_rel_err": MAX_RECAL_ETA_REL_ERR},
     }

@@ -580,10 +580,26 @@ def main():
                          "window's attribution summary")
     ap.add_argument("--recorder-capacity", type=int, default=8192,
                     help="flight-recorder ring size in events")
+    ap.add_argument("--openmetrics-out", default=None,
+                    metavar="METRICS.txt",
+                    help="write an OpenMetrics text exposition snapshot: "
+                         "metric counters/gauges plus the bandwidth "
+                         "ledger's per-(link, QoS, purpose, request "
+                         "class) byte charges and per-link efficiency")
+    ap.add_argument("--metrics-listen", default=None, metavar="HOST:PORT",
+                    help="after the run, serve the same OpenMetrics "
+                         "snapshot over HTTP at /metrics until "
+                         "interrupted (a scrape endpoint)")
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="close the drift loop in --degrade-sim: a "
+                         "DriftSentinel flag triggers a single-route "
+                         "re-probe + refit + hot-swap (needs "
+                         "--calibration-profile)")
     args = ap.parse_args()
 
     tracer = NULL_TRACER
-    if args.trace_out or args.metrics_out:
+    if args.trace_out or args.metrics_out or args.openmetrics_out \
+            or args.metrics_listen:
         from repro.obs import Tracer
         tracer = Tracer()
     recorder = None
@@ -595,6 +611,14 @@ def main():
             capacity=args.recorder_capacity,
             forward=tracer if tracer.enabled else None)
         tracer = recorder
+
+    def _render_openmetrics():
+        from repro.obs import BandwidthLedger, openmetrics_text
+        full = recorder.forward if (recorder is not None
+                                    and recorder.forward is not None) \
+            else tracer
+        return openmetrics_text(metrics=tracer.metrics,
+                                ledger=BandwidthLedger.from_tracer(full))
 
     def _flush_obs():
         # --trace-out wants the full history: the forwarded tracer when a
@@ -621,6 +645,24 @@ def main():
                   f"{meta.get('events')} events, "
                   f"{meta.get('dropped')} dropped; open in "
                   "https://ui.perfetto.dev)")
+        if args.openmetrics_out:
+            from repro.obs import write_openmetrics
+            write_openmetrics(args.openmetrics_out, _render_openmetrics())
+            print(f"# openmetrics: {args.openmetrics_out}")
+        if args.metrics_listen:
+            import time as _time
+            host, _, port = args.metrics_listen.rpartition(":")
+            from repro.obs import serve_openmetrics
+            server = serve_openmetrics(_render_openmetrics,
+                                       host=host or "127.0.0.1",
+                                       port=int(port))
+            print(f"# metrics: http://{host or '127.0.0.1'}:"
+                  f"{server.server_port}/metrics (Ctrl-C to stop)")
+            try:
+                while True:
+                    _time.sleep(3600)
+            except KeyboardInterrupt:
+                server.shutdown()
 
     if args.paged_sim:
         print(json.dumps(simulate_paged_decode(
@@ -651,9 +693,23 @@ def main():
         sched = host_link_degraded(system=args.system,
                                    at_round=args.degrade_round,
                                    factor=args.degrade_factor)
+        sentinel = None
+        if args.recalibrate:
+            if not args.calibration_profile:
+                ap.error("--recalibrate needs --calibration-profile "
+                         "(the drift sentinel's expectation and the "
+                         "recalibrator's profile to hot-swap)")
+            from repro.calibrate import CalibrationProfile
+            from repro.obs import DriftSentinel
+            prof = CalibrationProfile.load(args.calibration_profile)
+            sentinel = DriftSentinel(
+                prof, preset=args.system,
+                tracer=(tracer.scoped("react")
+                        if tracer.enabled else tracer))
         react = run_degraded_serve(
             sched, cfg=cfg, react=True,
             calibration_profile=args.calibration_profile,
+            sentinel=sentinel, recalibrate=args.recalibrate,
             tracer=tracer.scoped("react") if tracer.enabled else tracer,
             recorder=recorder)
         base = run_degraded_serve(

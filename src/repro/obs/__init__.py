@@ -28,7 +28,17 @@ And the consumers that turn that firehose into answers:
     snapshots the failing window to a Perfetto-loadable dump on alert.
   * ``drift`` — ``DriftSentinel``, observed per-route transfer timings
     replayed against ``CalibrationProfile`` predictions (Cohet-style
-    continuous re-validation).
+    continuous re-validation); its ``on_flag`` rising edge is what
+    triggers ``calibrate.recal`` auto-recalibration.
+  * ``ledger`` — ``BandwidthLedger``, always-on per-window byte
+    accounting over the fabric flow stream: every wire byte charged to
+    (link, QoS class, purpose, request class), conservation-reconciled
+    against timelines/FlowResults, per-link efficiency vs the calibrated
+    ceiling.
+  * ``timeseries`` — ``WindowAggregator`` fixed-window rates/gauges/
+    histogram quantiles (mergeable across the disagg roles) and the
+    OpenMetrics text exposition (``openmetrics_text`` /
+    ``serve_openmetrics``).
 
 Exports: ``Tracer`` (spans, instants, async flows, counters; injectable
 deterministic clock), ``NullTracer``/``NULL_TRACER`` (free when disabled),
@@ -46,10 +56,16 @@ from repro.obs.drift import DriftSentinel
 from repro.obs.export import (ChromeTraceWriter, chrome_trace,
                               recorder_trace, validate_chrome_trace,
                               write_chrome_trace)
-from repro.obs.metrics import NULL_METRICS, MetricsRegistry, NullMetrics
+from repro.obs.ledger import (BandwidthLedger, classify_purpose,
+                              classify_request, link_ceilings)
+from repro.obs.metrics import (NULL_METRICS, MetricsRegistry, NullMetrics,
+                               parse_key)
 from repro.obs.recorder import FlightRecorder
 from repro.obs.slo import LatencyHistogram, SLOMonitor
 from repro.obs.timeline import LinkTimeline, link_timelines
+from repro.obs.timeseries import (OPENMETRICS_CONTENT_TYPE,
+                                  WindowAggregator, openmetrics_text,
+                                  serve_openmetrics, write_openmetrics)
 from repro.obs.trace import (DEFAULT_TRACK, NULL_TRACER, NullTracer,
                              TraceEvent, Tracer)
 
@@ -63,4 +79,8 @@ __all__ = [
     "attribution_summary", "event_cursor", "events_since",
     "LatencyHistogram", "SLOMonitor",
     "FlightRecorder", "DriftSentinel",
+    "BandwidthLedger", "classify_purpose", "classify_request",
+    "link_ceilings", "parse_key",
+    "WindowAggregator", "openmetrics_text", "serve_openmetrics",
+    "write_openmetrics", "OPENMETRICS_CONTENT_TYPE",
 ]

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import collections
 import statistics
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.obs.trace import NULL_TRACER
 
@@ -56,12 +56,14 @@ class DriftSentinel:
 
     def __init__(self, expected, *, preset: Optional[str] = None,
                  threshold: float = 1.3, min_obs: int = 3,
-                 window: int = 16, tracer=NULL_TRACER):
+                 window: int = 16, tracer=NULL_TRACER,
+                 on_flag: Optional[Callable] = None):
         self.expected = _expected_system(expected, preset)
         self.threshold = float(threshold)
         self.min_obs = int(min_obs)
         self.window = int(window)
         self.tracer = tracer
+        self.on_flag = on_flag
         self._routes: dict[str, _RouteState] = {}
 
     def predict(self, route, wire_bytes: float, *, background=(),
@@ -126,7 +128,38 @@ class DriftSentinel:
                                median_ratio=statistics.median(st.ratios),
                                observed_s=observed, predicted_s=predicted)
                 tracer.metrics.add("drift.flags", 1, route=key)
+            if self.on_flag is not None:
+                # rising-edge only (parity with SLOMonitor.on_alert):
+                # fires once per flag transition, never per observation
+                self.on_flag(key, {
+                    "median_ratio": statistics.median(st.ratios),
+                    "observed_s": observed, "predicted_s": predicted,
+                    "ts": ts,
+                })
         return ratio
+
+    def clear(self, route: str) -> bool:
+        """Acknowledge a flag: reset the route's sticky bit *and* ratio
+        window, so post-recalibration observations start a fresh median
+        (stale pre-swap ratios would otherwise keep the route "drifting"
+        for up to ``window`` observations). Returns whether the route was
+        known. The next sustained excursion re-flags and re-fires
+        ``on_flag`` — acknowledgment is per-episode, not permanent."""
+        st = self._routes.get(route)
+        if st is None:
+            return False
+        was = st.flagged
+        st.flagged = False
+        st.ratios.clear()
+        if self.tracer.enabled and was:
+            self.tracer.instant("drift.clear", track=("drift", "routes"),
+                                cat="drift", route=route)
+        return True
+
+    def rebase(self, expected, *, preset: Optional[str] = None) -> None:
+        """Hot-swap the calibrated expectation (e.g. after an
+        ``AutoRecalibrator`` refit) without losing per-route history."""
+        self.expected = _expected_system(expected, preset)
 
     def _drifting(self, st: _RouteState) -> bool:
         return (len(st.ratios) >= self.min_obs

@@ -14,13 +14,59 @@ instrumented code never branches on "is observability on".
 
 from __future__ import annotations
 
+import re
+
+# Characters that play a structural role in the flat key grammar
+# ``name[k=v|k2=v2]``: a label key/value containing one raw would make two
+# different label sets collide on one key (``a="x|b=y"`` vs ``a=x, b=y``),
+# so they are backslash-escaped on write and unescaped by ``parse_key``.
+_ESCAPE_RE = re.compile(r"[\\=|\[\]]")
+_UNESCAPE_RE = re.compile(r"\\(.)")
+
+
+def _escape(s: str) -> str:
+    """Backslash-escape the key grammar's delimiters in one label part."""
+    if _ESCAPE_RE.search(s) is None:       # fast path: almost every label
+        return s
+    return _ESCAPE_RE.sub(lambda m: "\\" + m.group(), s)
+
 
 def _key(name: str, labels: dict) -> str:
-    """Deterministic flat key: ``name`` or ``name[k=v|k2=v2]`` (sorted)."""
+    """Deterministic flat key: ``name`` or ``name[k=v|k2=v2]`` (sorted).
+
+    Label keys/values are delimiter-escaped so distinct label sets can
+    never collide on one key (the ``parse_key`` round-trip property)."""
     if not labels:
         return name
-    inner = "|".join(f"{k}={labels[k]}" for k in sorted(labels))
+    inner = "|".join(f"{_escape(k)}={_escape(str(labels[k]))}"
+                     for k in sorted(labels))
     return f"{name}[{inner}]"
+
+
+def parse_key(key: str) -> tuple:
+    """Inverse of ``_key``: ``(name, labels_dict)``.
+
+    The consumer-side half of the escaping contract — the OpenMetrics
+    exporter (``repro.obs.timeseries``) parses registry keys back into
+    labeled samples, so the round trip must be exact for any label value.
+    """
+    if not key.endswith("]"):
+        return key, {}
+    i = key.find("[")
+    if i < 0:
+        return key, {}
+    name, inner = key[:i], key[i + 1:-1]
+    labels = {}
+    # split on unescaped "|" then unescaped "=" (escapes survive re.split
+    # because the delimiters are matched only when not backslash-prefixed)
+    for part in re.split(r"(?<!\\)\|", inner):
+        k, _, v = part.partition("=")
+        while k.endswith("\\"):              # the "=" we split on was escaped
+            k2, _, v2 = v.partition("=")
+            k = f"{k}={k2}"
+            v = v2
+        labels[_UNESCAPE_RE.sub(r"\1", k)] = _UNESCAPE_RE.sub(r"\1", v)
+    return name, labels
 
 
 class MetricsRegistry:

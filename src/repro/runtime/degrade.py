@@ -488,6 +488,7 @@ class DegradedServeReport:
     attribution: Optional[dict] = None   # pooled critical-path summary
     slo: Optional[dict] = None           # SLOMonitor.report() snapshot
     drift_routes: Optional[dict] = None  # DriftSentinel.report() snapshot
+    recal: Optional[tuple] = None        # RecalResult.to_json() + post_ratios
 
     def to_json(self) -> dict:
         out = {
@@ -511,6 +512,8 @@ class DegradedServeReport:
             out["slo"] = self.slo
         if self.drift_routes is not None:
             out["drift_routes"] = self.drift_routes
+        if self.recal is not None:
+            out["recal"] = list(self.recal)
         return out
 
 
@@ -538,6 +541,7 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
                        cfg: DegradedServeConfig = DegradedServeConfig(),
                        react: bool = True, calibration_profile=None,
                        slo=None, sentinel=None, recorder=None,
+                       recalibrate: bool = False,
                        tracer=NULL_TRACER) -> DegradedServeReport:
     """Serve ``cfg.rounds`` simulated decode rounds while ``schedule``
     degrades the fabric; detect and (if ``react``) recover.
@@ -567,6 +571,15 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
     when none was passed, and snapshotted (with the violating requests'
     attribution attached) at the first detector fire and the first
     alerting SLO window.
+
+    ``recalibrate=True`` (needs ``sentinel`` + ``calibration_profile``)
+    closes the drift loop: the sentinel's sticky flag triggers an
+    ``AutoRecalibrator`` that re-probes only the flagged route against
+    the round's live (degraded) fabric, refits, hot-swaps the constants
+    into the sentinel's expectation and the detector's fetch anchor, and
+    acknowledges the flag — so the drift ratio converges back to ~1.0 on
+    the machine as it now is. Each swap lands in the report's ``recal``
+    entries with the route's subsequent drift ratios.
     """
     from repro.fabric.contention import Flow
     from repro.fabric.systems import from_profile, get_system
@@ -601,11 +614,37 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
                           step_time=step_s,
                           priority=cfg.prefetch_priority)
     ref_sched = ref.schedule(seqs, cfg.gen)
-    expected_fetch = ref_sched.prefetch_total
+    # mutable anchor: auto-recalibration hot-swaps the expected fetch
+    # time when the spill route's constants are refit mid-serve
+    anchor = {"fetch_s": ref_sched.prefetch_total}
     slo_s = cfg.slo_slack * ref_sched.mean_completion
 
     detector = DegradationDetector(cfg=cfg.detector, tracer=tracer,
-                                   baseline=lambda: expected_fetch)
+                                   baseline=lambda: anchor["fetch_s"])
+
+    recal_ctl = None
+    pending_recal: list = []
+    recal_records: list = []
+    if recalibrate:
+        if sentinel is None or calibration_profile is None:
+            raise ValueError("recalibrate=True needs both sentinel= and "
+                             "calibration_profile= (the flag source and "
+                             "the profile to refit)")
+        from repro.calibrate.recal import AutoRecalibrator
+        recal_ctl = AutoRecalibrator(calibration_profile,
+                                     preset=cfg.system, sentinel=sentinel,
+                                     tracer=tracer)
+        prev_on_flag = sentinel.on_flag
+
+        def _queue_recal(route, info, _prev=prev_on_flag):
+            if _prev is not None:
+                _prev(route, info)
+            pending_recal.append(route)
+
+        sentinel.on_flag = _queue_recal
+    fetch_route_key = f"{base.tier_node(base.kv_tiers[1])}->{base.compute}"
+    ref_plan = getattr(ref_sched.plan, "transfer_plan", ref_sched.plan)
+    ref_wire_bytes = float(getattr(ref_plan, "wire_bytes", 0) or 4 << 20)
     recovery = RecoveryController(
         cache, fast_budget_frac=cfg.fast_budget_frac,
         prefetch_priority=max(1, cfg.prefetch_priority + 1),
@@ -690,7 +729,27 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
         if sentinel is not None:
             plan_r = getattr(sched.plan, "transfer_plan", sched.plan)
             if getattr(plan_r, "transfers", ()):
-                sentinel.observe_plan(plan_r, background=bg, ts=t)
+                ratio = sentinel.observe_plan(plan_r, background=bg, ts=t)
+                if ratio is not None:
+                    route_lbl = plan_r.route.label
+                    for rec in recal_records:
+                        if rec["route"] == route_lbl \
+                                and rec["round"] < r:
+                            rec["post_ratios"].append(round(ratio, 6))
+            if recal_ctl is not None and pending_recal:
+                # the drift loop's react leg: re-probe only the flagged
+                # route on this round's live fabric, hot-swap, ack
+                for route_key in pending_recal:
+                    res = recal_ctl.recalibrate(route_key,
+                                                truth_system=sys_r, ts=t)
+                    if route_key == fetch_route_key:
+                        anchor["fetch_s"] *= res.time_scale(
+                            ref_wire_bytes)
+                    rec = res.to_json()
+                    rec["round"] = r
+                    rec["post_ratios"] = []
+                    recal_records.append(rec)
+                pending_recal.clear()
         corroborated = False
         if attrs and monitor is not None \
                 and monitor.alerting("interactive"):
@@ -784,4 +843,5 @@ def run_degraded_serve(schedule: DegradationSchedule, *,
         violations_total=violations_total, slo_s=slo_s,
         attribution=attribution,
         slo=monitor.report() if monitor is not None else None,
-        drift_routes=sentinel.report() if sentinel is not None else None)
+        drift_routes=sentinel.report() if sentinel is not None else None,
+        recal=tuple(recal_records) if recal_records else None)

@@ -177,6 +177,8 @@ class DisaggReport:
     plan: object                 # transport.TransferPlan of the shipment
     attribution: Optional[dict] = None   # per-request critical-path
     slo: Optional[dict] = None           # SLOMonitor.report() snapshot
+    telemetry: Optional[dict] = None     # per-role window aggregators +
+    #                                      the merged fleet view
 
     @property
     def overlap_speedup(self) -> float:
@@ -225,6 +227,8 @@ class DisaggReport:
             out["attribution"] = self.attribution
         if self.slo is not None:
             out["slo"] = self.slo
+        if self.telemetry is not None:
+            out["telemetry"] = self.telemetry
         return out
 
 
@@ -364,4 +368,31 @@ def run_disagg_serve(cfg: DisaggConfig = DisaggConfig(), *, system=None,
               route=choice.route.label, provenance=choice.route.provenance)
         m.add("disagg.deadline_violations", len(sched.violations),
               system=system.name)
+        # per-role windowed telemetry rolled up into one fleet view: each
+        # role aggregates only what it can see locally; the merge is the
+        # collector's view after scraping both roles
+        from repro.obs.timeseries import WindowAggregator
+        win = max(sched.makespan / 8.0, 1e-9)
+        pre_agg = WindowAggregator(window_s=win)
+        dec_agg = WindowAggregator(window_s=win)
+        per_seq_wire = pages_per_seq * wire_page
+        for s, t in sorted(done.items()):
+            pre_agg.observe_counter("role.requests", 1, ts=t,
+                                    role="prefill")
+            pre_agg.observe_latency("prefill.latency", t, ts=t)
+        for s, t in sorted(sched.finish_time.items()):
+            dec_agg.observe_counter("role.requests", 1, ts=t,
+                                    role="decode")
+            dec_agg.observe_counter("ship.wire_bytes", per_seq_wire,
+                                    ts=ready[s], role="decode")
+            dec_agg.observe_latency("decode.completion", t - done[s],
+                                    ts=t)
+        fleet = WindowAggregator(window_s=win)
+        fleet.merge(pre_agg).merge(dec_agg)
+        report.telemetry = {
+            "window_s": win,
+            "roles": {"prefill": pre_agg.to_json(),
+                      "decode": dec_agg.to_json()},
+            "fleet": fleet.to_json(),
+        }
     return report

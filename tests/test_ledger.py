@@ -1,0 +1,198 @@
+"""repro.obs.ledger: byte attribution, conservation, efficiency.
+
+The ledger is a *second* consumer of the fabric trace stream (the link
+timelines were the first); its defining property is conservation — every
+byte it charges to a (link, QoS, purpose, request-class) cell must come
+from somewhere the simulator said a byte moved, and the totals must
+reconcile with the FlowResults, the LinkTimeline integrals, and the
+``fabric.link.bytes`` counters to <= 1e-6 rel err. The hypothesis
+property test drives that across randomized QoS scenarios.
+"""
+
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.fabric.contention import Flow
+from repro.fabric.sim import simulate
+from repro.fabric.systems import get_system
+from repro.obs import (BandwidthLedger, Tracer, classify_purpose,
+                       classify_request, link_ceilings, link_timelines)
+
+MiB = 1 << 20
+TOL = 1e-6
+
+
+def _run(flows, *, tracer=None, system="tpu_v5e"):
+    tracer = tracer or Tracer(clock=lambda: 0.0)
+    results = simulate(get_system(system).fabric, flows, tracer=tracer)
+    return tracer, results
+
+
+def _qos_flows():
+    return [Flow(f"page{i:02d}", "host_dram", "chip0", 4 * MiB,
+                 priority=1) for i in range(4)] + \
+        [Flow("bulk_offload", "host_dram", "chip0", 64 * MiB)]
+
+
+# ---------------------------------------------------------------------------
+# Classification vocabulary
+# ---------------------------------------------------------------------------
+
+
+def test_classify_purpose_vocabulary():
+    assert classify_purpose("page03") == "prefetch"
+    assert classify_purpose("probe1") == "prefetch"
+    assert classify_purpose("ship/s0/p1") == "ship"
+    assert classify_purpose("migrate_kv_7") == "migration"
+    assert classify_purpose("bulk_offload") == "spill"
+    assert classify_purpose("weight_spill") == "spill"
+    assert classify_purpose("mystery") == "other"
+
+
+def test_classify_request_classes():
+    assert classify_request("prefetch", 0) == "interactive"
+    assert classify_request("ship", 1) == "interactive"
+    assert classify_request("spill", 1) == "batch"
+    assert classify_request("migration", 0) == "system"
+    assert classify_request("other", 1) == "interactive"
+    assert classify_request("other", 0) == "batch"
+
+
+# ---------------------------------------------------------------------------
+# Conservation: ledger vs FlowResults / timelines / counters
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_reconciles_three_ways_on_qos_scenario():
+    tracer, results = _run(_qos_flows())
+    led = BandwidthLedger.from_tracer(tracer)
+    assert led.flow_conservation()["max_rel_err"] <= TOL
+    assert led.reconcile_flow_bytes(results)["rel_err"] <= TOL
+    assert led.reconcile_timelines(
+        link_timelines(tracer))["max_rel_err"] <= TOL
+    assert led.reconcile_metrics(tracer.metrics)["max_rel_err"] <= TOL
+
+
+def test_ledger_entries_attribute_by_qos_and_purpose():
+    tracer, _ = _run(_qos_flows())
+    led = BandwidthLedger.from_tracer(tracer)
+    cells = {(e["qos"], e["purpose"], e["request_class"]): e["bytes"]
+             for e in led.entries() if e["link"].endswith(":pcie")}
+    assert cells[("p1", "prefetch", "interactive")] == \
+        pytest.approx(16 * MiB, rel=TOL)
+    assert cells[("p0", "spill", "batch")] == \
+        pytest.approx(64 * MiB, rel=TOL)
+
+
+def test_ledger_windows_sum_to_link_totals():
+    tracer, _ = _run(_qos_flows())
+    led = BandwidthLedger.from_tracer(tracer, window_s=0.001)
+    summed: dict = {}
+    for w in led.windows():
+        for link, nb in w["links"].items():
+            summed[link] = summed.get(link, 0.0) + nb
+    totals = led.link_totals()
+    assert set(summed) == set(totals)
+    for link in totals:
+        assert summed[link] == pytest.approx(totals[link], rel=TOL)
+
+
+def test_ledger_concatenates_sequential_runs():
+    tracer = Tracer(clock=lambda: 0.0)
+    _run([Flow("page0", "host_dram", "chip0", 8 * MiB, priority=1)],
+         tracer=tracer)
+    _run([Flow("page0", "host_dram", "chip0", 8 * MiB, priority=1)],
+         tracer=tracer)                      # same round-local flow id
+    led = BandwidthLedger.from_tracer(tracer, window_s=1e-4)
+    cons = led.flow_conservation()
+    assert cons["n_flows"] == 2
+    assert cons["max_rel_err"] <= TOL
+    # both runs' bytes land on the ledger (16 MiB across the pcie link)
+    assert led.link_totals()["host_dram->chip0:pcie"] == \
+        pytest.approx(16 * MiB, rel=TOL)
+    # the counters accumulate across runs too — multi-run reconciliation
+    assert led.reconcile_metrics(tracer.metrics)["max_rel_err"] <= TOL
+    # windows from the second run sit after the first run's span
+    w = led.windows()
+    assert w[-1]["start_s"] > 0.0
+
+
+def test_ledger_process_filter_selects_one_arm():
+    tracer = Tracer(clock=lambda: 0.0)
+    _run([Flow("page0", "host_dram", "chip0", 8 * MiB)],
+         tracer=tracer.scoped("react"))
+    _run([Flow("page0", "host_dram", "chip0", 24 * MiB)],
+         tracer=tracer.scoped("baseline"))
+    react = BandwidthLedger.from_tracer(tracer, process="react")
+    base = BandwidthLedger.from_tracer(tracer, process="baseline")
+    both = BandwidthLedger.from_tracer(tracer)
+    assert react.total_bytes() == pytest.approx(8 * MiB, rel=TOL)
+    assert base.total_bytes() == pytest.approx(24 * MiB, rel=TOL)
+    assert both.total_bytes() == pytest.approx(32 * MiB, rel=TOL)
+
+
+# ---------------------------------------------------------------------------
+# Efficiency vs the calibrated ceiling
+# ---------------------------------------------------------------------------
+
+
+def test_efficiency_reads_degradation_fraction():
+    from repro.runtime.degrade import host_link_degraded
+    base = get_system("tpu_v5e")
+    deg = host_link_degraded(factor=0.5).degraded_system(base, 11)
+    tracer = Tracer(clock=lambda: 0.0)
+    simulate(deg.fabric, [Flow("page0", "host_dram", "chip0", 32 * MiB)],
+             tracer=tracer)
+    led = BandwidthLedger.from_tracer(tracer,
+                                      ceilings=link_ceilings(base))
+    eff = led.efficiency()["host_dram->chip0:pcie"]["efficiency"]
+    assert eff == pytest.approx(0.5, rel=1e-6)
+
+
+def test_efficiency_omits_non_bottleneck_links():
+    # hbm1 -> chip0 crosses hbm + ici; only the slower ici link is ever
+    # the bottleneck, so the hbm feeder must not be scored
+    tracer, _ = _run([Flow("page0", "hbm1", "chip0", 32 * MiB)])
+    led = BandwidthLedger.from_tracer(tracer)
+    eff = led.efficiency()
+    assert set(eff) == {"chip1->chip0:ici"}
+    assert eff["chip1->chip0:ici"]["efficiency"] == \
+        pytest.approx(1.0, rel=1e-6)
+
+
+def test_link_ceilings_keyed_by_trace_label():
+    base = get_system("tpu_v5e")
+    ceil = link_ceilings(base)
+    assert "host_dram->chip0:pcie" in ceil
+    assert all(v > 0 for v in ceil.values())
+
+
+# ---------------------------------------------------------------------------
+# Property: conservation across randomized QoS scenarios
+# ---------------------------------------------------------------------------
+
+_ROUTES = [("host_dram", "chip0"), ("host_dram", "hbm0"),
+           ("hbm1", "chip0"), ("host_dram", "chip1")]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(
+    st.tuples(st.integers(0, len(_ROUTES) - 1),      # route
+              st.integers(1, 64),                    # MiB
+              st.integers(0, 2),                     # priority
+              st.integers(0, 20)),                   # start (ms)
+    min_size=1, max_size=6))
+def test_ledger_conserves_bytes_on_random_scenarios(specs):
+    flows = []
+    for i, (ri, mib, prio, start_ms) in enumerate(specs):
+        src, dst = _ROUTES[ri]
+        name = ["page", "ship", "bulk_offload", "migrate_"][i % 4]
+        flows.append(Flow(f"{name}{i}", src, dst, mib * MiB,
+                          priority=prio, start=start_ms * 1e-3))
+    tracer, results = _run(flows)
+    led = BandwidthLedger.from_tracer(tracer)
+    assert led.flow_conservation()["max_rel_err"] <= TOL
+    assert led.reconcile_flow_bytes(results)["rel_err"] <= TOL
+    assert led.reconcile_timelines(
+        link_timelines(tracer))["max_rel_err"] <= TOL
+    assert led.reconcile_metrics(tracer.metrics)["max_rel_err"] <= TOL

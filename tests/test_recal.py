@@ -1,0 +1,156 @@
+"""Auto-recalibration: drift flag -> single-route re-probe -> refit ->
+hot-swap, and the closed loop inside the degraded serve.
+"""
+
+import functools
+
+import pytest
+
+from repro.calibrate import AutoRecalibrator, CalibrationRunner
+from repro.fabric.systems import from_profile, get_system
+from repro.obs import DriftSentinel, Tracer
+from repro.runtime.degrade import host_link_degraded, run_degraded_serve
+
+MiB = 1 << 20
+
+
+@functools.lru_cache(maxsize=1)
+def _profile():
+    return CalibrationRunner("tpu_v5e", source="emulated").calibrate()
+
+
+def _degraded(factor=0.5):
+    base = from_profile(_profile(), preset="tpu_v5e")
+    return host_link_degraded(factor=factor).degraded_system(base, 11)
+
+
+# ---------------------------------------------------------------------------
+# Runner route narrowing (what makes recalibration cheap)
+# ---------------------------------------------------------------------------
+
+
+def test_runner_run_narrows_to_requested_routes():
+    runner = CalibrationRunner("tpu_v5e", source="emulated", repeats=1,
+                               iters=3)
+    all_routes = runner.routes()
+    assert len(all_routes) > 1
+    one = all_routes[0]
+    samples = runner.run(routes=[one])
+    assert samples
+    assert {(s.src, s.dst) for s in samples} == {(one[1], one[2])}
+    assert len(samples) == len(runner.sizes)
+
+
+def test_runner_truth_system_override():
+    deg = _degraded()
+    runner = CalibrationRunner("tpu_v5e", source="emulated",
+                               truth_system=deg, repeats=1, iters=3)
+    assert runner.truth_system is deg
+
+
+# ---------------------------------------------------------------------------
+# AutoRecalibrator: single-route refit + hot-swap
+# ---------------------------------------------------------------------------
+
+
+def test_recalibrate_refits_only_the_drifted_route():
+    prof = _profile()
+    recal = AutoRecalibrator(prof, preset="tpu_v5e")
+    res = recal.recalibrate("host_dram->chip0", truth_system=_degraded())
+    # the halved link's refit bandwidth lands near half the old estimate
+    assert 0.4 < res.estimate.bandwidth / res.old_estimate.bandwidth < 0.6
+    # only that route's estimate changed in the swapped profile
+    changed = [(e.src, e.dst) for e, o in zip(recal.profile.links,
+                                              prof.links) if e != o]
+    assert changed == [("host_dram", "chip0")]
+    # provenance: the re-probe samples append to the profile's history
+    assert len(recal.profile.samples) == \
+        len(prof.samples) + res.n_samples
+    # the rebuilt system carries the degraded constants
+    assert res.system.fabric.route_bandwidth("host_dram", "chip0") == \
+        pytest.approx(res.estimate.bandwidth, rel=0.05)
+    assert recal.recals == [res]
+
+
+def test_recalibrate_time_scale_reflects_slowdown():
+    recal = AutoRecalibrator(_profile(), preset="tpu_v5e")
+    res = recal.recalibrate("host_dram->chip0", truth_system=_degraded())
+    # bandwidth halved -> a bulk transfer takes ~2x the old prediction
+    assert res.time_scale(64 * MiB) == pytest.approx(2.0, rel=0.1)
+    j = res.to_json()
+    assert j["route"] == "host_dram->chip0"
+    assert j["fitted_bandwidth"] < j["old_bandwidth"]
+
+
+def test_recalibrate_rebases_and_clears_sentinel():
+    prof = _profile()
+    tr = Tracer(clock=lambda: 0.0)
+    sent = DriftSentinel(prof, preset="tpu_v5e", min_obs=3)
+    from repro.transport import PageTransfer, Route, plan_transfers
+    deg = _degraded()
+    route = Route.resolve(deg, "host_dram", "chip0")
+    for i in range(4):
+        sent.observe_plan(plan_transfers(
+            route, (PageTransfer(f"p{i}", 8 * MiB),)), ts=float(i))
+    assert sent.flagged_routes() == ["host_dram->chip0"]
+    recal = AutoRecalibrator(prof, preset="tpu_v5e", sentinel=sent,
+                             tracer=tr)
+    recal.recalibrate("host_dram->chip0", truth_system=deg, ts=10.0)
+    assert sent.flagged_routes() == []
+    # post-swap observations on the degraded fabric read ~1.0
+    for i in range(4):
+        sent.observe_plan(plan_transfers(
+            route, (PageTransfer(f"q{i}", 8 * MiB),)), ts=20.0 + i)
+    med = sent.report()["routes"]["host_dram->chip0"]["median_ratio"]
+    assert med == pytest.approx(1.0, abs=0.1)
+    names = [e.name for e in tr.events]
+    assert "recal.start" in names and "recal.done" in names
+    assert tr.metrics.counter("recal.count",
+                              route="host_dram->chip0") == 1
+
+
+def test_recalibrate_rejects_unmapped_route():
+    recal = AutoRecalibrator(_profile(), preset="tpu_v5e")
+    with pytest.raises(ValueError, match="mapped memory tier"):
+        recal.recalibrate("chip0->chip1", truth_system=_degraded())
+    with pytest.raises(ValueError, match="src->dst"):
+        recal.recalibrate("not a route", truth_system=_degraded())
+
+
+# ---------------------------------------------------------------------------
+# The closed loop inside the degraded serve
+# ---------------------------------------------------------------------------
+
+
+def test_degraded_serve_recalibrates_and_converges():
+    prof = _profile()
+    sent = DriftSentinel(prof, preset="tpu_v5e")
+    rep = run_degraded_serve(host_link_degraded(), react=True,
+                             calibration_profile=prof, sentinel=sent,
+                             recalibrate=True)
+    assert rep.recal and len(rep.recal) == 1
+    rec = rep.recal[0]
+    assert rec["route"] == "host_dram->chip0"
+    assert rec["fitted_bandwidth"] < rec["old_bandwidth"]
+    # convergence: every post-swap drift ratio within 10% of 1.0
+    assert rec["post_ratios"], "no rounds observed after the swap"
+    assert all(r <= 1.1 for r in rec["post_ratios"]), rec["post_ratios"]
+    # the flag was acknowledged, the route is no longer drifting
+    assert sent.flagged_routes() == []
+    assert sent.drifting_routes() == []
+    assert "recal" in rep.to_json()
+
+
+def test_degraded_serve_recalibrate_requires_sentinel_and_profile():
+    with pytest.raises(ValueError, match="recalibrate=True needs"):
+        run_degraded_serve(host_link_degraded(), react=True,
+                           recalibrate=True)
+
+
+def test_degraded_serve_without_recalibrate_keeps_flag():
+    prof = _profile()
+    sent = DriftSentinel(prof, preset="tpu_v5e")
+    rep = run_degraded_serve(host_link_degraded(), react=True,
+                             calibration_profile=prof, sentinel=sent)
+    assert sent.flagged_routes() == ["host_dram->chip0"]
+    assert rep.recal is None

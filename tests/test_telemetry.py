@@ -1,0 +1,294 @@
+"""Fleet telemetry: metric-key escaping, windowed time-series aggregation
+and merge, OpenMetrics exposition, and the drift sentinel's flag callback
+— the PR-10 satellites around the bandwidth ledger.
+"""
+
+import random
+import urllib.request
+
+import pytest
+
+from repro.obs import (DriftSentinel, LatencyHistogram, MetricsRegistry,
+                       Tracer, WindowAggregator, openmetrics_text,
+                       parse_key, serve_openmetrics)
+from repro.obs.metrics import _key
+
+MiB = 1 << 20
+
+# ---------------------------------------------------------------------------
+# Metric key escaping (delimiter injection)
+# ---------------------------------------------------------------------------
+
+_NASTY = ["plain", "a|b", "a=b", "x[0]", "back\\slash", "p|q=r[s]\\t", ""]
+
+
+def test_key_roundtrips_delimiter_characters():
+    for v in _NASTY:
+        for k in ("route", "a|b", "a=b"):
+            key = _key("m.name", {k: v})
+            name, labels = parse_key(key)
+            assert name == "m.name"
+            assert labels == {k: v}, (key, labels)
+
+
+def test_key_collision_freedom():
+    # the classic injection: a label *value* that spells another label
+    assert _key("m", {"a": "x|b=y"}) != _key("m", {"a": "x", "b": "y"})
+    assert _key("m", {"a|b": "c"}) != _key("m", {"a": "b=c"})
+
+
+def test_registry_retrieval_with_nasty_label_values():
+    m = MetricsRegistry()
+    m.add("bytes", 7, link="a->b|type=pcie")
+    m.add("bytes", 5, link="a->b|type=pcie")
+    assert m.counter("bytes", link="a->b|type=pcie") == 12
+    # the snapshot key parses back to the original labels
+    key = next(iter(m.to_json()["counters"]))
+    assert parse_key(key) == ("bytes", {"link": "a->b|type=pcie"})
+
+
+def test_parse_key_unlabeled():
+    assert parse_key("plain.name") == ("plain.name", {})
+
+
+# ---------------------------------------------------------------------------
+# LatencyHistogram merge algebra
+# ---------------------------------------------------------------------------
+
+
+def _hist(seed, n=200):
+    rng = random.Random(seed)
+    h = LatencyHistogram()
+    for _ in range(n):
+        h.record(rng.uniform(1e-6, 1e-1))
+    return h
+
+
+def _copy(h):
+    return LatencyHistogram.from_json(h.to_json())
+
+
+def test_histogram_merge_commutative():
+    a, b = _hist(1), _hist(2)
+    ab = _copy(a).merge(_copy(b))
+    ba = _copy(b).merge(_copy(a))
+    assert ab.to_json() == ba.to_json()
+    assert ab.count == a.count + b.count
+
+
+def test_histogram_merge_associative():
+    a, b, c = _hist(1), _hist(2), _hist(3)
+    left = _copy(a).merge(_copy(b)).merge(_copy(c))
+    right = _copy(a).merge(_copy(b).merge(_copy(c)))
+    assert left.to_json() == right.to_json()
+    for q in (50, 95, 99):
+        assert left.percentile(q) == right.percentile(q)
+
+
+# ---------------------------------------------------------------------------
+# WindowAggregator
+# ---------------------------------------------------------------------------
+
+
+def test_aggregator_rates_and_quantiles_per_window():
+    agg = WindowAggregator(window_s=0.5)
+    agg.observe_counter("req", 4, ts=0.1, role="prefill")
+    agg.observe_counter("req", 2, ts=0.3, role="prefill")
+    agg.observe_counter("req", 10, ts=0.7, role="prefill")
+    agg.observe_latency("lat", 0.010, ts=0.2)
+    agg.observe_latency("lat", 0.030, ts=0.2)
+    assert agg.window_indices() == [0, 1]
+    r0 = agg.rates(0)
+    assert r0[_key("req", {"role": "prefill"})] == pytest.approx(12.0)
+    assert agg.rates()[_key("req", {"role": "prefill"})] == \
+        pytest.approx(20.0)                     # latest window by default
+    q = agg.quantiles(0)["lat"]
+    assert q["p50"] <= q["p95"] <= q["p99"]
+
+
+def test_aggregator_merge_rolls_roles_up():
+    pre = WindowAggregator(window_s=1.0)
+    dec = WindowAggregator(window_s=1.0)
+    pre.observe_counter("req", 3, ts=0.5, role="prefill")
+    pre.observe_latency("lat", 0.01, ts=0.5)
+    dec.observe_counter("req", 5, ts=0.5, role="decode")
+    dec.observe_latency("lat", 0.03, ts=0.5)
+    dec.observe_gauge("depth", 7, ts=0.5)
+    fleet = WindowAggregator(window_s=1.0)
+    fleet.merge(pre).merge(dec)
+    r = fleet.rates(0)
+    assert r[_key("req", {"role": "prefill"})] == pytest.approx(3.0)
+    assert r[_key("req", {"role": "decode"})] == pytest.approx(5.0)
+    # histogram merge copies: the source role's telemetry is untouched
+    assert pre.quantiles(0)["lat"]["p99"] < 0.02
+    fq = fleet.quantiles(0)["lat"]
+    assert fq["p50"] < fq["p99"]
+    assert fleet.to_json()["windows"]["0"]["gauges"]["depth"] == 7
+
+
+def test_aggregator_merge_rejects_window_mismatch():
+    with pytest.raises(ValueError, match="window sizes differ"):
+        WindowAggregator(window_s=1.0).merge(WindowAggregator(window_s=2.0))
+
+
+def test_aggregator_ingest_metrics_diffs_cumulative_counters():
+    m = MetricsRegistry()
+    agg = WindowAggregator(window_s=1.0)
+    m.add("bytes", 100, link="l0")
+    agg.ingest_metrics(m, ts=0.5)
+    m.add("bytes", 300, link="l0")
+    m.set("util", 0.7, link="l0")
+    agg.ingest_metrics(m, ts=1.5)
+    key = _key("bytes", {"link": "l0"})
+    assert agg.rates(0)[key] == pytest.approx(100.0)
+    assert agg.rates(1)[key] == pytest.approx(300.0)   # delta, not total
+    assert agg.to_json()["windows"]["1"]["gauges"][
+        _key("util", {"link": "l0"})] == pytest.approx(0.7)
+
+
+def test_aggregator_trims_beyond_horizon():
+    agg = WindowAggregator(window_s=1.0, horizon=4)
+    for i in range(10):
+        agg.observe_counter("c", 1, ts=float(i))
+    assert min(agg.window_indices()) >= 5
+
+
+# ---------------------------------------------------------------------------
+# OpenMetrics exposition
+# ---------------------------------------------------------------------------
+
+
+def _exposition():
+    m = MetricsRegistry()
+    m.add("fabric.link.bytes", 1024, link='weird"link\\name')
+    m.set("queue.depth", 3, role="decode")
+    h = LatencyHistogram()
+    for v in (0.001, 0.002, 0.004):
+        h.record(v)
+    agg = WindowAggregator(window_s=1.0)
+    agg.observe_counter("req", 5, ts=0.5)
+    return openmetrics_text(metrics=m, aggregator=agg,
+                            histograms={"serve.latency": h})
+
+
+def test_openmetrics_text_structure():
+    text = _exposition()
+    assert text.endswith("# EOF\n")
+    lines = text.splitlines()
+    assert "# TYPE fabric_link_bytes counter" in lines
+    assert "# TYPE queue_depth gauge" in lines
+    assert "# TYPE serve_latency summary" in lines
+    # counters expose *_total samples; label values are escaped
+    sample = next(ln for ln in lines
+                  if ln.startswith("fabric_link_bytes_total"))
+    assert '\\"' in sample and "\\\\" in sample
+    assert sample.endswith(" 1024")
+    assert any(ln.startswith("req_rate") and ln.endswith(" 5")
+               for ln in lines)
+    assert any(ln.startswith("serve_latency_count") for ln in lines)
+
+
+def test_openmetrics_ledger_families():
+    from repro.fabric.contention import Flow
+    from repro.fabric.sim import simulate
+    from repro.fabric.systems import get_system
+    from repro.obs import BandwidthLedger
+    tr = Tracer(clock=lambda: 0.0)
+    simulate(get_system("tpu_v5e").fabric,
+             [Flow("page0", "host_dram", "chip0", 8 * MiB, priority=1)],
+             tracer=tr)
+    text = openmetrics_text(metrics=tr.metrics,
+                            ledger=BandwidthLedger.from_tracer(tr))
+    assert 'repro_ledger_bytes_total{link="host_dram->chip0:pcie",' \
+        'purpose="prefetch",qos="p1",request_class="interactive"}' in text
+    assert "# TYPE repro_link_efficiency gauge" in text
+
+
+def test_serve_openmetrics_http_roundtrip():
+    server = serve_openmetrics(_exposition, port=0)
+    try:
+        url = f"http://127.0.0.1:{server.server_port}/metrics"
+        with urllib.request.urlopen(url) as resp:
+            body = resp.read().decode("utf-8")
+            ctype = resp.headers["Content-Type"]
+        assert body == _exposition()
+        assert ctype.startswith("application/openmetrics-text")
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{server.server_port}/nope")
+    finally:
+        server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Drift sentinel flag callback + acknowledge
+# ---------------------------------------------------------------------------
+
+
+def _observe_route(sentinel, system, src, dst, n, *, ts0=0.0):
+    from repro.transport import PageTransfer, Route, plan_transfers
+    route = Route.resolve(system, src, dst)
+    for i in range(n):
+        plan = plan_transfers(route,
+                              (PageTransfer(f"{src}-{i}", 8 * MiB),))
+        sentinel.observe_plan(plan, ts=ts0 + i)
+
+
+def _degraded_pair():
+    from repro.fabric.systems import get_system
+    from repro.runtime.degrade import host_link_degraded
+    base = get_system("tpu_v5e")
+    return base, host_link_degraded().degraded_system(base, 11)
+
+
+def test_on_flag_fires_once_on_rising_edge():
+    base, deg = _degraded_pair()
+    calls = []
+    sent = DriftSentinel(base, min_obs=3,
+                         on_flag=lambda route, info:
+                         calls.append((route, info)))
+    _observe_route(sent, deg, "host_dram", "chip0", 6)
+    assert len(calls) == 1                      # sticky: no re-fire
+    route, info = calls[0]
+    assert route == "host_dram->chip0"
+    assert info["median_ratio"] > 1.5
+    assert info["observed_s"] > info["predicted_s"]
+
+
+def test_clear_acknowledges_and_allows_reflag():
+    base, deg = _degraded_pair()
+    calls = []
+    sent = DriftSentinel(base, min_obs=3,
+                         on_flag=lambda route, info: calls.append(route))
+    _observe_route(sent, deg, "host_dram", "chip0", 4)
+    assert sent.flagged_routes() == ["host_dram->chip0"]
+    assert sent.clear("host_dram->chip0") is True
+    assert sent.clear("no->route") is False
+    assert sent.flagged_routes() == []
+    # ratios reset with the flag: min_obs fresh observations re-flag
+    _observe_route(sent, deg, "host_dram", "chip0", 4, ts0=100.0)
+    assert sent.flagged_routes() == ["host_dram->chip0"]
+    assert calls == ["host_dram->chip0", "host_dram->chip0"]
+
+
+def test_clear_emits_trace_instant():
+    base, deg = _degraded_pair()
+    tr = Tracer(clock=lambda: 0.0)
+    sent = DriftSentinel(base, min_obs=3, tracer=tr)
+    _observe_route(sent, deg, "host_dram", "chip0", 4)
+    sent.clear("host_dram->chip0")
+    names = [e.name for e in tr.events]
+    assert "drift.flag" in names and "drift.clear" in names
+
+
+def test_rebase_swaps_expectation():
+    base, deg = _degraded_pair()
+    sent = DriftSentinel(base, min_obs=3)
+    _observe_route(sent, deg, "host_dram", "chip0", 4)
+    assert sent.flagged_routes() == ["host_dram->chip0"]
+    sent.rebase(deg)                 # expectation = the fabric as it is
+    sent.clear("host_dram->chip0")
+    _observe_route(sent, deg, "host_dram", "chip0", 4, ts0=50.0)
+    rep = sent.report()["routes"]["host_dram->chip0"]
+    assert rep["median_ratio"] == pytest.approx(1.0, rel=1e-6)
+    assert sent.flagged_routes() == []
